@@ -1,0 +1,36 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Uses the xlstm-125m architecture at FULL width/depth (196M params with
+embeddings) on the deterministic Markov task, with checkpointing + the
+fault-tolerant runner — the complete production loop, CPU-runnable.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+(expect ~15-40 min on one CPU core for 200 steps; use --steps 30 for a
+quick look — loss visibly decreases within ~20 steps.)
+"""
+
+import argparse
+
+from repro.launch.train import train_loop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config instead of the full 125M")
+    args = ap.parse_args()
+
+    _, losses, task = train_loop(
+        "xlstm-125m", smoke=args.smoke, steps=args.steps, batch=args.batch,
+        seq=args.seq, ckpt_dir=args.ckpt_dir, peak_lr=1e-3, log_every=10)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(task entropy floor {task.entropy_floor_nats:.3f} nats)")
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — conversion-aware analog-offload framework (Meech et al. 2023)."""
+
+__version__ = "1.0.0"

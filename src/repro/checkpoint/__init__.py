@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing (atomic, hashed, async, mesh-elastic)."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

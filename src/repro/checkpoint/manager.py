@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: atomic, hashed, async, elastic.
+
+Layout per step:
+
+    <dir>/step_0000420/
+        manifest.json     tree structure, shapes, dtypes, per-leaf sha256
+        leaf_00000.npy ... one file per pytree leaf (np.save, fp32/int as-is)
+    <dir>/LATEST          text file naming the newest *complete* step dir
+
+Guarantees:
+  * atomicity  — written to ``.tmp-<step>`` then os.rename'd; a crash
+    mid-write can never corrupt LATEST (rename is atomic on POSIX).
+  * integrity  — restore verifies each leaf's sha256 against the manifest;
+    a corrupted checkpoint raises and the caller falls back to the previous
+    step (see ``restore_latest(..., allow_fallback=True)``).
+  * elasticity — leaves are stored *unsharded*; ``restore`` device_puts
+    them with whatever sharding the (possibly different) target mesh needs,
+    so a 256-chip checkpoint restores onto 512 chips and vice versa.
+  * async      — ``save_async`` snapshots to host RAM synchronously
+    (jax.device_get) and writes on a daemon thread; ``wait`` joins.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _tree_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3) -> None:
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ----- write path ---------------------------------------------------------
+    def save(self, step: int, tree: Any) -> str:
+        host_tree = jax.device_get(tree)
+        return self._write(step, host_tree)
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        host_tree = jax.device_get(tree)  # snapshot before training mutates
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any) -> str:
+        name = f"step_{step:010d}"
+        tmp = os.path.join(self.dir, f".tmp-{name}")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree_util.tree_flatten(host_tree)
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            with open(os.path.join(tmp, fname), "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            manifest["leaves"].append({
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "sha256": digest})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        with open(os.path.join(self.dir, ".tmp-LATEST"), "w") as f:
+            f.write(name)
+        os.replace(os.path.join(self.dir, ".tmp-LATEST"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ----- read path --------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for n in os.listdir(self.dir):
+            if n.startswith("step_"):
+                try:
+                    out.append(int(n[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            name = f.read().strip()
+        try:
+            return int(name[5:])
+        except ValueError:
+            return None
+
+    def restore(self, step: int, like: Any, *,
+                shardings: Any | None = None, verify: bool = True) -> Any:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs); ``shardings`` (same structure, or None) places
+        leaves onto the current mesh — different from the saving mesh is fine.
+        """
+        base = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(base, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        if len(manifest["leaves"]) != len(leaves_like):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, "
+                f"target structure has {len(leaves_like)}")
+        shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                        if shardings is not None else [None] * len(leaves_like))
+        out = []
+        for entry, tgt, shd in zip(manifest["leaves"], leaves_like, shard_leaves):
+            path = os.path.join(base, entry["file"])
+            if verify:
+                with open(path, "rb") as f:
+                    digest = hashlib.sha256(f.read()).hexdigest()
+                if digest != entry["sha256"]:
+                    raise IOError(f"checksum mismatch in {path}")
+            arr = np.load(path)
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"shape mismatch {arr.shape} vs {tgt.shape} "
+                                 f"for {entry['file']}")
+            out.append(jax.device_put(arr, shd) if shd is not None
+                       else jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def restore_latest(self, like: Any, *, shardings: Any | None = None,
+                       allow_fallback: bool = True):
+        """Returns (step, tree) from the newest valid checkpoint, walking
+        backwards past corrupted ones when ``allow_fallback``."""
+        candidates = sorted(self.steps(), reverse=True)
+        last_err: Exception | None = None
+        for step in candidates:
+            try:
+                return step, self.restore(step, like, shardings=shardings)
+            except Exception as e:  # corrupted/incomplete -> try older
+                last_err = e
+                if not allow_fallback:
+                    raise
+        if last_err is not None:
+            raise last_err
+        return None, None

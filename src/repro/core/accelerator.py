@@ -1,0 +1,223 @@
+"""Analog accelerator specifications and end-to-end step cost models.
+
+The paper's Fig. 7a architecture: a digital host talks to an analog optical
+engine through (i) a DAC + spatial-light-modulator write path and (ii) a
+camera detector + ADC read path.  The analog compute itself (diffraction)
+runs at the speed of light; everything else is the data-conversion /
+data-movement boundary that this paper identifies as the bottleneck.
+
+Two accelerator families are modeled:
+
+* ``OpticalFourierAcceleratorSpec`` — the paper's own 4f Fourier/convolution
+  engine (Appendix A/B).
+* ``OpticalMVMAcceleratorSpec`` — the optical matrix-vector-multiply engine
+  of Anderson et al. that the paper's §2 critique targets; included so the
+  offload planner can evaluate the "more promising" MVM target (§5.1) under
+  honest conversion costs.
+
+Cost model conventions: times in seconds, energies in joules, ``n`` counts
+scalar samples crossing the conversion boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.conversion import ConverterSpec, KIM_2019_DAC, LIU_2022_ADC
+
+__all__ = [
+    "StepCost",
+    "OpticalFourierAcceleratorSpec",
+    "OpticalMVMAcceleratorSpec",
+    "PROTOTYPE_4F",
+    "IDEAL_4F",
+    "ANDERSON_MVM",
+    "SPEED_OF_LIGHT_M_S",
+]
+
+SPEED_OF_LIGHT_M_S = 299_792_458.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StepCost:
+    """Cost breakdown for one accelerator invocation (the Fig. 8 split)."""
+
+    dac_s: float
+    adc_s: float
+    interface_s: float      # host<->peripheral link (SLM write + camera read)
+    analog_s: float         # the physics (time of flight / settle / exposure)
+    host_s: float = 0.0     # digital post-processing (e.g. the host iFFT)
+
+    @property
+    def total_s(self) -> float:
+        return self.dac_s + self.adc_s + self.interface_s + self.analog_s + self.host_s
+
+    @property
+    def conversion_s(self) -> float:
+        return self.dac_s + self.adc_s
+
+    @property
+    def data_movement_fraction(self) -> float:
+        """Fraction of wall time spent moving/converting data (paper: 99.599%)."""
+        tot = self.total_s
+        if tot <= 0:
+            return 0.0
+        return (self.dac_s + self.adc_s + self.interface_s) / tot
+
+    def scaled(self, k: float) -> "StepCost":
+        return StepCost(self.dac_s * k, self.adc_s * k, self.interface_s * k,
+                        self.analog_s * k, self.host_s * k)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpticalFourierAcceleratorSpec:
+    """A 4f optical Fourier/convolution accelerator (paper Appendix A/B).
+
+    Attributes:
+      name: identifier.
+      slm_pixels: (rows, cols) of the programmable aperture.
+      dac / adc: converter design points on the write/read paths.
+      dac_lanes / adc_lanes: parallel converter lanes (column-parallel
+        readout in modern image sensors; 1 for the serial prototype).
+      slm_interface_hz: pixel-write rate of the peripheral link into the SLM
+        local memory (the paper's prototype uses a 60 Hz-display-class link).
+      camera_interface_hz: pixel-read rate of the camera link.
+      slm_settle_s: liquid-crystal settle time per frame.
+      exposure_s: detector integration time per frame.
+      path_length_m: optical path (4f => 4 * focal_length).
+      macro_pixel: aggregation factor per axis for crosstalk mitigation
+        (Anderson et al. aggregate 3x3 -> macro_pixel=3, costing 9x pixels).
+      phase_shift_captures: captures per result; 1 = magnitude-only detector,
+        4 = four-step phase-shifting interferometry (complex recovery).
+    """
+
+    name: str
+    slm_pixels: tuple[int, int] = (1024, 768)
+    dac: ConverterSpec = KIM_2019_DAC
+    adc: ConverterSpec = LIU_2022_ADC
+    dac_lanes: int = 1
+    adc_lanes: int = 1
+    slm_interface_hz: float = 1.0e6
+    camera_interface_hz: float = 1.0e6
+    slm_settle_s: float = 1.0e-3
+    exposure_s: float = 1.0e-3
+    path_length_m: float = 0.5
+    macro_pixel: int = 1
+    phase_shift_captures: int = 1
+
+    @property
+    def usable_pixels(self) -> int:
+        r, c = self.slm_pixels
+        return (r // self.macro_pixel) * (c // self.macro_pixel)
+
+    def time_of_flight_s(self) -> float:
+        return self.path_length_m / SPEED_OF_LIGHT_M_S
+
+    def step_cost(self, n_in: int, n_out: int | None = None,
+                  host_s: float = 0.0) -> StepCost:
+        """Cost of one accelerated op moving ``n_in`` samples in, ``n_out`` out.
+
+        The conversion complexity is the paper's C = 2N (Fig. 3) when
+        n_out == n_in.  Every capture repeats the read path
+        (``phase_shift_captures`` of them) but the write path is programmed
+        once per input.
+        """
+        if n_out is None:
+            n_out = n_in
+        caps = self.phase_shift_captures
+        dac_s = self.dac.time_for(n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(n_out, self.adc_lanes) * caps
+        interface_s = (n_in / self.slm_interface_hz
+                       + caps * n_out / self.camera_interface_hz)
+        analog_s = (self.slm_settle_s + self.exposure_s) * caps + self.time_of_flight_s()
+        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=interface_s,
+                        analog_s=analog_s, host_s=host_s)
+
+    def step_energy_j(self, n_in: int, n_out: int | None = None) -> float:
+        if n_out is None:
+            n_out = n_in
+        return (self.dac.energy_for(n_in)
+                + self.adc.energy_for(n_out) * self.phase_shift_captures)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpticalMVMAcceleratorSpec:
+    """An optical matrix-vector multiply engine (Anderson et al. class).
+
+    Weights are assumed held in the optical domain (amortized); activations
+    cross the conversion boundary every pass: DAC in, ADC out.  One pass
+    computes ``rows x cols`` MACs.
+    """
+
+    name: str
+    rows: int = 512
+    cols: int = 512
+    dac: ConverterSpec = KIM_2019_DAC
+    adc: ConverterSpec = LIU_2022_ADC
+    dac_lanes: int = 512          # wavelength/space multiplexed input lanes
+    adc_lanes: int = 512
+    optical_pass_s: float = 1.0e-9
+    mac_energy_j: float = 1.0e-17  # sub-fJ optical MAC (their claim)
+
+    def macs_per_pass(self) -> int:
+        return self.rows * self.cols
+
+    def step_cost(self, n_in: int, n_out: int, host_s: float = 0.0) -> StepCost:
+        dac_s = self.dac.time_for(n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(n_out, self.adc_lanes)
+        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=0.0,
+                        analog_s=self.optical_pass_s, host_s=host_s)
+
+    def matmul_cost(self, m: int, k: int, n: int) -> StepCost:
+        """Cost of an (m,k) @ (k,n) matmul tiled onto the optical core.
+
+        The (k,n) operand is treated as weights (pre-loaded); the (m,k)
+        activations stream through the converters.  Tiling: ceil(k/rows) *
+        ceil(n/cols) passes per activation row-block.
+        """
+        row_tiles = math.ceil(k / self.rows)
+        col_tiles = math.ceil(n / self.cols)
+        passes = m * row_tiles * col_tiles
+        n_in = m * k * col_tiles          # activations re-enter per col tile
+        n_out = m * n * row_tiles         # partials exit per row tile
+        dac_s = self.dac.time_for(n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(n_out, self.adc_lanes)
+        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=0.0,
+                        analog_s=passes * self.optical_pass_s)
+
+
+# --- Named instances ---------------------------------------------------------
+
+# Calibrated to the paper's Fig. 8 measurement: a 1024x768 Fourier transform
+# takes 5.209 s end to end on the prototype, 99.599 % of it data movement,
+# vs 0.219 s for the software FFT on the same Raspberry Pi 4.  The prototype
+# drives the SLM and reads the camera over 60 Hz-display-class USB/DSI links.
+PROTOTYPE_4F = OpticalFourierAcceleratorSpec(
+    name="prototype-4f",
+    slm_pixels=(1024, 768),
+    dac_lanes=1,
+    adc_lanes=1,
+    slm_interface_hz=300_164.0,    # 2.620 s to program 786,432 pixels
+    camera_interface_hz=306_256.0, # 2.568 s to read them back
+    slm_settle_s=10.0e-3,
+    exposure_s=11.0e-3,
+    path_length_m=0.5,
+)
+
+# The paper's "ideal" accelerator for the Amdahl study: FFT/conv cost == 0.
+IDEAL_4F = OpticalFourierAcceleratorSpec(
+    name="ideal-4f",
+    slm_pixels=(4096, 4096),
+    dac_lanes=10**9,
+    adc_lanes=10**9,
+    slm_interface_hz=math.inf,
+    camera_interface_hz=math.inf,
+    slm_settle_s=0.0,
+    exposure_s=0.0,
+    path_length_m=0.0,
+)
+
+# Anderson et al. optical transformer MVM engine, evaluated at honest
+# (on-frontier) converter costs — the paper's §2 critique target.
+ANDERSON_MVM = OpticalMVMAcceleratorSpec(name="anderson-mvm")

@@ -1,0 +1,272 @@
+"""Differentiable 4f optical Fourier/convolution accelerator simulator.
+
+Physics pipeline (paper Fig. 5/7, Appendix A.1), end to end in JAX:
+
+  digital input -> DAC quantization -> SLM encoding (amplitude or phase,
+  optional macro-pixel aggregation and nearest-neighbour crosstalk)
+  -> Fraunhofer propagation (unitary 2-D DFT; the lens does this "for free")
+  -> [optional Fourier-plane mask for convolution]
+  -> photodetector |field|^2 with shot + read noise
+  -> ADC quantization -> digital output.
+
+The camera is square-law: a single capture yields only the *magnitude* of
+the Fourier transform (paper App. A.1).  ``phase_captures=4`` enables
+four-step phase-shifting interferometry (Macfaden et al.), recovering the
+complex field at 4x the read-out/conversion cost — the cost model in
+``repro.core.accelerator`` charges for every capture.
+
+Quantizers use a straight-through estimator so the whole accelerator is
+differentiable (useful for hardware-in-the-loop training experiments).
+
+This module is the *functional* model; the *cost* model lives in
+``repro.core.accelerator``.  The Pallas TPU kernel implementing the fused
+DFT-as-matmul + detector hot path is ``repro.kernels.optical_dft``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OpticalSimParams",
+    "dac_quantize",
+    "adc_quantize",
+    "macro_pixel_aggregate",
+    "slm_crosstalk",
+    "fraunhofer",
+    "detector_intensity",
+    "optical_fft2_magnitude",
+    "optical_fft2_complex",
+    "optical_conv2d",
+    "fourier_mask_for_kernel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OpticalSimParams:
+    """Physics-fidelity knobs for the simulator (all static under jit).
+
+    Attributes:
+      dac_bits / adc_bits: converter resolutions on the write/read paths.
+      macro_pixel: aggregate k x k SLM pixels into one logical pixel
+        (crosstalk mitigation per Anderson et al.; costs k^2 resolution).
+      crosstalk: nearest-neighbour SLM coupling coefficient (0 disables).
+      shot_noise: photon shot-noise scale (std = sqrt(I * shot_noise)).
+      read_noise: additive detector read noise std (in intensity units).
+      reference_amplitude: reference-beam amplitude for phase-shifting
+        interferometry (complex recovery).
+      encoding: how digital values drive the SLM. ``amplitude`` modulates
+        field magnitude in [0,1]; ``phase`` maps [0,1] -> [0, 2pi) phase.
+    """
+
+    dac_bits: int = 8
+    adc_bits: int = 8
+    macro_pixel: int = 1
+    crosstalk: float = 0.0
+    shot_noise: float = 0.0
+    read_noise: float = 0.0
+    reference_amplitude: float = 1.0
+    encoding: Literal["amplitude", "phase"] = "amplitude"
+
+    def __post_init__(self) -> None:
+        if self.dac_bits < 1 or self.adc_bits < 1:
+            raise ValueError("converter resolutions must be >= 1 bit")
+        if self.macro_pixel < 1:
+            raise ValueError("macro_pixel must be >= 1")
+        if not 0.0 <= self.crosstalk < 0.25:
+            raise ValueError("crosstalk must be in [0, 0.25)")
+
+
+IDEAL_SIM = OpticalSimParams(dac_bits=16, adc_bits=16)
+
+
+# --- Converter models --------------------------------------------------------
+
+def _ste_round(x: jax.Array) -> jax.Array:
+    """round() with a straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def dac_quantize(x: jax.Array, bits: int) -> jax.Array:
+    """Uniform quantization of values in [0, 1] to ``bits`` resolution."""
+    levels = (1 << bits) - 1
+    x = jnp.clip(x, 0.0, 1.0)
+    return _ste_round(x * levels) / levels
+
+
+def adc_quantize(x: jax.Array, bits: int) -> jax.Array:
+    """ADC model: auto-ranged uniform quantization of a non-negative signal.
+
+    Real detectors auto-expose; we normalize by the (stop-gradient) max so
+    the quantizer always uses its full range, then restore scale.
+    """
+    levels = (1 << bits) - 1
+    scale = jax.lax.stop_gradient(jnp.maximum(jnp.max(x), 1e-20))
+    y = jnp.clip(x / scale, 0.0, 1.0)
+    return _ste_round(y * levels) / levels * scale
+
+
+# --- SLM models ---------------------------------------------------------------
+
+def macro_pixel_aggregate(x: jax.Array, k: int) -> jax.Array:
+    """Mean-pool k x k blocks (Anderson et al. 3x3 macro pixels).
+
+    Output is (H//k, W//k): the accelerator genuinely loses resolution.
+    """
+    if k == 1:
+        return x
+    h, w = x.shape[-2], x.shape[-1]
+    hk, wk = (h // k) * k, (w // k) * k
+    x = x[..., :hk, :wk]
+    x = x.reshape(*x.shape[:-2], hk // k, k, wk // k, k)
+    return x.mean(axis=(-3, -1))
+
+
+def slm_crosstalk(x: jax.Array, c: float) -> jax.Array:
+    """Nearest-neighbour pixel coupling: x <- (1-4c) x + c * (4-neighbours)."""
+    if c == 0.0:
+        return x
+    up = jnp.roll(x, 1, axis=-2)
+    down = jnp.roll(x, -1, axis=-2)
+    left = jnp.roll(x, 1, axis=-1)
+    right = jnp.roll(x, -1, axis=-1)
+    return (1.0 - 4.0 * c) * x + c * (up + down + left + right)
+
+
+def _slm_field(values: jax.Array, params: OpticalSimParams) -> jax.Array:
+    """Digital values in [0,1] -> complex optical field at the aperture."""
+    v = dac_quantize(values, params.dac_bits)
+    v = slm_crosstalk(v, params.crosstalk)
+    v = macro_pixel_aggregate(v, params.macro_pixel)
+    if params.encoding == "amplitude":
+        return v.astype(jnp.complex64)
+    phase = (2.0 * jnp.pi) * v
+    return jnp.exp(1j * phase.astype(jnp.float32))
+
+
+# --- Propagation and detection ------------------------------------------------
+
+def fraunhofer(field: jax.Array) -> jax.Array:
+    """Far-field (Fraunhofer) propagation == unitary 2-D DFT.
+
+    Valid when D >> a and D >> a^2 / lambda (paper App. A.1); the lens in the
+    4f system realizes this at distance f.
+    """
+    return jnp.fft.fft2(field, norm="ortho")
+
+
+def _raw_intensity(field: jax.Array, params: OpticalSimParams,
+                   key: jax.Array | None) -> jax.Array:
+    """Square-law detection with shot + read noise (pre-ADC)."""
+    intensity = jnp.abs(field) ** 2
+    if key is not None and (params.shot_noise > 0.0 or params.read_noise > 0.0):
+        shot_key, read_key = jax.random.split(key)
+        std = jnp.sqrt(intensity * params.shot_noise)
+        intensity = intensity + std * jax.random.normal(shot_key, intensity.shape)
+        intensity = intensity + params.read_noise * jax.random.normal(
+            read_key, intensity.shape)
+        intensity = jnp.maximum(intensity, 0.0)
+    return intensity
+
+
+def detector_intensity(field: jax.Array, params: OpticalSimParams,
+                       key: jax.Array | None) -> jax.Array:
+    """Square-law detector with shot + read noise, then ADC quantization."""
+    return adc_quantize(_raw_intensity(field, params, key), params.adc_bits)
+
+
+def _phase_shift_captures(out: jax.Array, params: OpticalSimParams,
+                          key: jax.Array | None) -> jax.Array:
+    """Four-step interferometric capture -> recovered complex field.
+
+    All four exposures share one ADC full-scale setting (a real camera does
+    not re-auto-expose between the phase steps; per-capture auto-ranging
+    would destroy the linear combination below).
+    """
+    r = params.reference_amplitude
+    keys = jax.random.split(key, 4) if key is not None else [None] * 4
+    raw = []
+    for theta, k in zip((0.0, 0.5 * jnp.pi, jnp.pi, 1.5 * jnp.pi), keys):
+        ref = r * jnp.exp(1j * jnp.asarray(theta, jnp.complex64))
+        raw.append(_raw_intensity(out + ref, params, k))
+    i0, i90, i180, i270 = jnp.split(
+        adc_quantize(jnp.stack(raw), params.adc_bits), 4, axis=0)
+    return ((i0 - i180) + 1j * (i90 - i270))[0] / (4.0 * r)
+
+
+# --- Public accelerator ops ----------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def optical_fft2_magnitude(values: jax.Array,
+                           params: OpticalSimParams = IDEAL_SIM,
+                           key: jax.Array | None = None) -> jax.Array:
+    """Single-capture accelerator output: |F(values)| (magnitude only).
+
+    ``values`` must be in [0,1] (host is responsible for range mapping; the
+    DAC has a fixed full-scale range).
+    """
+    field = _slm_field(values, params)
+    out = fraunhofer(field)
+    # the epsilon keeps d/dI sqrt(I) finite at dark pixels (I == 0)
+    return jnp.sqrt(jnp.maximum(detector_intensity(out, params, key), 1e-20))
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def optical_fft2_complex(values: jax.Array,
+                         params: OpticalSimParams = IDEAL_SIM,
+                         key: jax.Array | None = None) -> jax.Array:
+    """Four-step phase-shifting capture: recovers the complex F(values).
+
+    I_theta = |F + r e^{i theta}|^2 for theta in {0, pi/2, pi, 3pi/2};
+    F = ((I_0 - I_pi) + i (I_{pi/2} - I_{3pi/2})) / (4 r).
+    Costs 4 exposures + 4 ADC passes (see accelerator cost model).
+    """
+    field = _slm_field(values, params)
+    out = fraunhofer(field)
+    return _phase_shift_captures(out, params, key)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def fourier_mask_for_kernel(kernel: jax.Array, shape: tuple[int, int] | None = None,
+                            params: OpticalSimParams = IDEAL_SIM) -> jax.Array:
+    """Precompute the Fourier-plane mask F(kernel) for a conv kernel.
+
+    In the 4f accelerator the second aperture holds this mask; for repeated
+    convolutions with the same kernel (CNNs) its cost is amortized, which is
+    why the paper treats kernel upload as negligible next to per-image I/O.
+    """
+    del params  # the mask is fabricated/programmed at full precision
+    if shape is not None:
+        h, w = shape
+        kernel = jnp.pad(kernel, ((0, h - kernel.shape[0]), (0, w - kernel.shape[1])))
+    return jnp.fft.fft2(kernel, norm="ortho")
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def optical_conv2d(values: jax.Array, fourier_mask: jax.Array,
+                   params: OpticalSimParams = IDEAL_SIM,
+                   key: jax.Array | None = None) -> jax.Array:
+    """Circular 2-D convolution via the 4f system (paper Eq. 1).
+
+    The optics compute C = F(A) * mask at the camera plane; the *host*
+    performs the final inverse transform digitally (paper App. A.1: "the
+    optical setup cannot perform the final inverse Fourier transform step").
+    Complex capture (4-step) is required for a faithful convolution; the
+    cost model charges 4 reads.
+
+    Returns the real part of ifft2(C) scaled back to unnormalized conv units.
+    """
+    field = _slm_field(values, params)
+    c = fraunhofer(field) * fourier_mask
+    c_rec = _phase_shift_captures(c, params, key)
+    # Host-side digital inverse transform (unitary), undoing the two
+    # unitary forward transforms' normalization: a true circular conv is
+    # ifft2(fft2(a) * fft2(k)) with no norm, = sqrt(HW) * unitary pipeline.
+    h, w = c_rec.shape[-2], c_rec.shape[-1]
+    scale = jnp.sqrt(jnp.asarray(h * w, jnp.float32))
+    return jnp.real(jnp.fft.ifft2(c_rec, norm="ortho")) * scale

@@ -1,0 +1,168 @@
+"""Conversion-aware offload planner (the paper's §4–§6 decision rule, executable).
+
+Given a per-category workload profile (host seconds + boundary sample counts)
+and an analog accelerator spec, the planner:
+
+  1. prices each accelerable category on the accelerator *including* the
+     DAC/ADC + interface costs (the paper's whole point — never price the
+     analog compute alone);
+  2. offloads a category only when the priced accelerator time beats the host;
+  3. reports the end-to-end Amdahl speedup, the zero-cost ideal bound
+     (paper Table 1), and the verdict against the 10x build-threshold (§5).
+
+The same machinery runs against the 27-benchmark suite (time-profiled) and
+the 10 assigned LM architectures (FLOP-profiled via
+``repro.core.profiler.flops_by_category``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping, Sequence
+
+from repro.core import amdahl
+from repro.core.accelerator import (
+    OpticalFourierAcceleratorSpec,
+    OpticalMVMAcceleratorSpec,
+)
+
+__all__ = [
+    "CategoryProfile",
+    "OffloadDecision",
+    "OffloadPlan",
+    "plan_offload",
+    "BUILD_THRESHOLD",
+]
+
+# §5: accelerators must deliver >= 10x on a metric users care about.
+BUILD_THRESHOLD = 10.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CategoryProfile:
+    """Workload of one op category over a full application run.
+
+    host_s: wall time the host spends in this category.
+    calls: number of accelerator invocations offload would require.
+    samples_in / samples_out: scalars crossing the conversion boundary per
+      *run* (summed over calls).
+    host_post_s: digital post-processing that offload cannot remove (e.g.
+      the host-side inverse FFT of the 4f convolution pipeline).
+    """
+
+    name: str
+    host_s: float
+    calls: int = 1
+    samples_in: int = 0
+    samples_out: int = 0
+    host_post_s: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadDecision:
+    category: str
+    host_s: float
+    accel_s: float          # conversion + interface + analog + residual host
+    conversion_s: float     # DAC+ADC share of accel_s
+    offload: bool
+
+    @property
+    def category_speedup(self) -> float:
+        if not self.offload or self.accel_s <= 0:
+            return 1.0
+        return self.host_s / self.accel_s
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadPlan:
+    accelerator: str
+    decisions: tuple[OffloadDecision, ...]
+    total_host_s: float
+    total_planned_s: float
+
+    @property
+    def end_to_end_speedup(self) -> float:
+        if self.total_planned_s <= 0:
+            return math.inf
+        return self.total_host_s / self.total_planned_s
+
+    @property
+    def offloaded_fraction(self) -> float:
+        if self.total_host_s <= 0:
+            return 0.0
+        off = sum(d.host_s for d in self.decisions if d.offload)
+        return min(off / self.total_host_s, 1.0)
+
+    @property
+    def ideal_speedup(self) -> float:
+        """Paper Table 1 column: zero-cost accelerator Amdahl bound."""
+        return amdahl.ideal_speedup(self.offloaded_fraction)
+
+    @property
+    def worthwhile(self) -> bool:
+        return self.end_to_end_speedup >= BUILD_THRESHOLD
+
+    @property
+    def conversion_bound(self) -> bool:
+        """True when conversion dominates planned accelerator time."""
+        conv = sum(d.conversion_s for d in self.decisions if d.offload)
+        acc = sum(d.accel_s for d in self.decisions if d.offload)
+        return acc > 0 and conv / acc > 0.5
+
+    def summary(self) -> str:
+        rows = [f"plan[{self.accelerator}] speedup={self.end_to_end_speedup:.2f}x "
+                f"(ideal={self.ideal_speedup:.2f}x, f={self.offloaded_fraction:.2%}, "
+                f"worthwhile={self.worthwhile}, conversion_bound={self.conversion_bound})"]
+        for d in self.decisions:
+            rows.append(f"  {d.category:>8}: host={d.host_s:.4g}s "
+                        f"accel={d.accel_s:.4g}s (conv {d.conversion_s:.4g}s) "
+                        f"offload={d.offload}")
+        return "\n".join(rows)
+
+
+_SUPPORTS: Mapping[type, tuple[str, ...]] = {
+    OpticalFourierAcceleratorSpec: ("fft", "conv"),
+    OpticalMVMAcceleratorSpec: ("matmul",),
+}
+
+
+def _price(spec, prof: CategoryProfile) -> tuple[float, float]:
+    """Accelerator wall time and its conversion share for one category."""
+    if prof.calls <= 0:
+        return 0.0, 0.0
+    n_in = max(prof.samples_in // prof.calls, 1)
+    n_out = max(prof.samples_out // prof.calls, 1) if prof.samples_out else n_in
+    cost = spec.step_cost(n_in, n_out)
+    total = cost.total_s * prof.calls + prof.host_post_s
+    return total, cost.conversion_s * prof.calls
+
+
+def plan_offload(profiles: Sequence[CategoryProfile],
+                 spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec,
+                 ) -> OffloadPlan:
+    """Price every category on ``spec`` and keep only profitable offloads."""
+    supported = ()
+    for klass, cats in _SUPPORTS.items():
+        if isinstance(spec, klass):
+            supported = cats
+            break
+    decisions = []
+    total_host = 0.0
+    total_planned = 0.0
+    for prof in profiles:
+        total_host += prof.host_s
+        if prof.name in supported and prof.host_s > 0:
+            accel_s, conv_s = _price(spec, prof)
+            offload = accel_s < prof.host_s
+            decisions.append(OffloadDecision(
+                category=prof.name, host_s=prof.host_s, accel_s=accel_s,
+                conversion_s=conv_s, offload=offload))
+            total_planned += min(accel_s, prof.host_s)
+        else:
+            decisions.append(OffloadDecision(
+                category=prof.name, host_s=prof.host_s, accel_s=math.inf,
+                conversion_s=0.0, offload=False))
+            total_planned += prof.host_s
+    return OffloadPlan(accelerator=spec.name, decisions=tuple(decisions),
+                       total_host_s=total_host, total_planned_s=total_planned)

@@ -1,0 +1,237 @@
+"""Application profiling: per-op-category time and FLOP attribution.
+
+Two complementary profilers, mirroring the paper's methodology (App. C.1 —
+cProfile with FFT/conv-named functions attributed to the accelerator):
+
+* ``OpProfiler`` — wall-clock accumulation by category, used by the
+  27-benchmark Amdahl suite.  Callers bracket accelerable ops with
+  ``prof.op("fft")`` and the driver builds Table-1 rows from the totals.
+* ``flops_by_category`` — static attribution: walks a jaxpr (recursing
+  through pjit/scan/remat, multiplying by trip counts) and buckets FLOPs
+  into {matmul, conv, fft, other}.  This is how the planner evaluates
+  offload for the 10 assigned LM architectures without timing them.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+__all__ = ["OpProfiler", "flops_by_category", "OFFLOADABLE_CATEGORIES"]
+
+OFFLOADABLE_CATEGORIES = ("fft", "conv", "matmul")
+
+
+def _block(x: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+class OpProfiler:
+    """Accumulates wall time by op category.
+
+    Uses ``time.perf_counter`` and blocks on JAX arrays leaving a bracketed
+    region so device-async execution cannot leak accelerable time into the
+    'other' bucket (the paper's cProfile methodology has the same role).
+    """
+
+    def __init__(self) -> None:
+        self.seconds: dict[str, float] = collections.defaultdict(float)
+        self.calls: dict[str, int] = collections.defaultdict(int)
+        self.samples_in: dict[str, int] = collections.defaultdict(int)
+        self.samples_out: dict[str, int] = collections.defaultdict(int)
+        self._t0: float | None = None
+
+    # -- session -------------------------------------------------------------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        if self._t0 is None:
+            raise RuntimeError("profiler not started")
+        total = time.perf_counter() - self._t0
+        self.seconds["__total__"] += total
+        self._t0 = None
+        return total
+
+    # -- op bracketing ---------------------------------------------------------
+    @contextlib.contextmanager
+    def op(self, category: str, n_in: int = 0, n_out: int = 0):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.seconds[category] += time.perf_counter() - t0
+            self.calls[category] += 1
+            self.samples_in[category] += int(n_in)
+            self.samples_out[category] += int(n_out)
+
+    def run(self, category: str, fn: Callable, *args, **kwargs):
+        """Run ``fn`` under ``category``, blocking on its outputs."""
+        n_in = sum(int(np.size(a)) for a in jax.tree_util.tree_leaves((args, kwargs))
+                   if hasattr(a, "shape"))
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        _block(out)
+        dt = time.perf_counter() - t0
+        n_out = sum(int(np.size(a)) for a in jax.tree_util.tree_leaves(out)
+                    if hasattr(a, "shape"))
+        self.seconds[category] += dt
+        self.calls[category] += 1
+        self.samples_in[category] += n_in
+        self.samples_out[category] += n_out
+        return out
+
+    # -- reporting --------------------------------------------------------------
+    @property
+    def total_s(self) -> float:
+        return self.seconds.get("__total__", 0.0)
+
+    def accelerable_s(self, categories=("fft", "conv")) -> float:
+        return sum(self.seconds.get(c, 0.0) for c in categories)
+
+    def fraction(self, categories=("fft", "conv")) -> float:
+        tot = self.total_s
+        return 0.0 if tot == 0.0 else min(self.accelerable_s(categories) / tot, 1.0)
+
+
+# --- Static jaxpr FLOP attribution -----------------------------------------------
+
+
+def _shape(var) -> tuple[int, ...]:
+    return tuple(getattr(var.aval, "shape", ()) or ())
+
+
+def _nelem(var) -> int:
+    return int(np.prod(_shape(var), dtype=np.int64)) if _shape(var) else 1
+
+
+def _dot_general_flops(eqn) -> float:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = _shape(eqn.invars[0]), _shape(eqn.invars[1])
+    batch = float(np.prod([lhs[i] for i in lb], dtype=np.float64)) if lb else 1.0
+    contract = float(np.prod([lhs[i] for i in lc], dtype=np.float64)) if lc else 1.0
+    m = float(np.prod([d for i, d in enumerate(lhs) if i not in lc and i not in lb],
+                      dtype=np.float64))
+    n = float(np.prod([d for i, d in enumerate(rhs) if i not in rc and i not in rb],
+                      dtype=np.float64))
+    return 2.0 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> float:
+    out_elems = float(_nelem(eqn.outvars[0]))
+    rhs = _shape(eqn.invars[1])  # (out_ch, in_ch/groups, *spatial) in default dnums
+    dn = eqn.params["dimension_numbers"]
+    spatial = [rhs[i] for i in dn.rhs_spec[2:]]
+    in_ch = rhs[dn.rhs_spec[1]]
+    return 2.0 * out_elems * in_ch * float(np.prod(spatial, dtype=np.float64))
+
+
+def _fft_flops(eqn) -> float:
+    shape = _shape(eqn.invars[0])
+    lens = eqn.params["fft_lengths"]
+    batch = float(np.prod(shape, dtype=np.float64)) / max(
+        float(np.prod(lens, dtype=np.float64)), 1.0)
+    n = float(np.prod(lens, dtype=np.float64))
+    return 5.0 * batch * n * max(np.log2(max(n, 2.0)), 1.0)
+
+
+_CALL_PARAM = {
+    "jit": "jaxpr", "pjit": "jaxpr", "closed_call": "call_jaxpr",
+    "remat2": "jaxpr", "checkpoint": "jaxpr",
+    "custom_jvp_call": "call_jaxpr", "custom_vjp_call": "call_jaxpr",
+    "custom_vjp_call_jaxpr": "fun_jaxpr",
+}
+
+
+def _walk(jaxpr, mult: float, out: dict[str, float]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            out["matmul"] += mult * _dot_general_flops(eqn)
+        elif name == "conv_general_dilated":
+            out["conv"] += mult * _conv_flops(eqn)
+        elif name == "fft":
+            out["fft"] += mult * _fft_flops(eqn)
+        elif name == "scan":
+            inner = eqn.params["jaxpr"].jaxpr
+            _walk(inner, mult * float(eqn.params["length"]), out)
+        elif name == "while":
+            # Trip count is data-dependent; attribute one iteration and flag.
+            _walk(eqn.params["body_jaxpr"].jaxpr, mult, out)
+            out["__while_unknown_trips__"] += 1.0
+        elif name == "cond":
+            for br in eqn.params["branches"]:
+                _walk(br.jaxpr, mult / max(len(eqn.params["branches"]), 1), out)
+        elif name in _CALL_PARAM:
+            inner = eqn.params.get(_CALL_PARAM[name])
+            if inner is not None:
+                _walk(getattr(inner, "jaxpr", inner), mult, out)
+        else:
+            out["other"] += mult * sum(float(_nelem(v)) for v in eqn.outvars)
+
+
+_NO_TRAFFIC = {"reshape", "bitcast", "bitcast_convert_type", "squeeze",
+               "broadcast_in_dim", "stop_gradient", "copy"}
+
+
+def _walk_bytes(jaxpr, mult: float, acc: list) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            _walk_bytes(eqn.params["jaxpr"].jaxpr,
+                        mult * float(eqn.params["length"]), acc)
+        elif name == "while":
+            _walk_bytes(eqn.params["body_jaxpr"].jaxpr, mult, acc)
+        elif name == "cond":
+            for br in eqn.params["branches"]:
+                _walk_bytes(br.jaxpr, mult / max(len(eqn.params["branches"]), 1),
+                            acc)
+        elif name in _CALL_PARAM:
+            inner = eqn.params.get(_CALL_PARAM[name])
+            if inner is not None:
+                _walk_bytes(getattr(inner, "jaxpr", inner), mult, acc)
+        elif name in _NO_TRAFFIC:
+            continue
+        else:
+            b = 0.0
+            for v in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(v, "aval", None)
+                if aval is None or not getattr(aval, "shape", None):
+                    continue
+                b += float(np.prod(aval.shape, dtype=np.float64)) \
+                    * np.dtype(aval.dtype).itemsize
+            acc[0] += mult * b
+
+
+def traffic_bytes(fn: Callable, *args, **kwargs) -> float:
+    """Scan-aware estimate of total memory traffic (operand+result bytes of
+    every op, trip-count multiplied).  Fusion-naive: elementwise chains are
+    counted per op, so this is an *upper bound* on HBM traffic — but unlike
+    cost_analysis it does not under-count loop bodies or over-scale one-time
+    ops, making it the consistent numerator for the roofline memory term.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    acc = [0.0]
+    _walk_bytes(closed.jaxpr, 1.0, acc)
+    return acc[0]
+
+
+def flops_by_category(fn: Callable, *args, **kwargs) -> dict[str, float]:
+    """Trace ``fn`` and attribute FLOPs to {matmul, conv, fft, other}.
+
+    'other' counts one FLOP per produced element of every non-contraction op
+    (a deliberate *under*-estimate of memory-bound time: the planner treats
+    'other' as non-offloadable, so under-counting it makes the offload verdict
+    *more* generous to the accelerator — the paper's best-case methodology).
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    out: dict[str, float] = collections.defaultdict(float)
+    _walk(closed.jaxpr, 1.0, out)
+    return dict(out)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic, resumable, sharded synthetic sources."""
+
+from repro.data.pipeline import MarkovTask, SyntheticTask, make_batch_sharding
+
+__all__ = ["SyntheticTask", "MarkovTask", "make_batch_sharding"]

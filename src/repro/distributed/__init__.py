@@ -1,0 +1,5 @@
+"""Distributed runtime: sharding rules, collectives, elasticity, fault tolerance."""
+
+from repro.distributed.sharding import batch_axes, constrain, logical_to_mesh
+
+__all__ = ["constrain", "batch_axes", "logical_to_mesh"]

@@ -1,0 +1,89 @@
+"""Mesh-aware sharding helpers.
+
+``constrain`` is the single entry point models use to pin activation
+shardings: it is a no-op outside a mesh context (CPU smoke tests) and drops
+axis names the current mesh does not define (so the same model code runs on
+the single-pod (data, model) mesh, the multi-pod (pod, data, model) mesh,
+and tiny test meshes).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["constrain", "batch_axes", "current_axis_names", "logical_to_mesh",
+           "activation_sharding_mode", "constrain_residual"]
+
+
+def activation_sharding_mode() -> str:
+    """'baseline' = parameter-driven SPMD propagation only;
+    'dp' = residual stream pinned batch-sharded at block boundaries
+    (EXPERIMENTS.md §Perf iteration 1: prevents XLA's contraction-dim psum
+    strategy from all-reducing full unsharded activations under FSDP).
+    Controlled by REPRO_ACT_SHARDING so the dry-run can A/B the two
+    lowerings without code changes."""
+    return os.environ.get("REPRO_ACT_SHARDING", "baseline")
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Pin a (B, S, D) residual-stream tensor between blocks.
+
+    mode 'dp':  batch over the data axes.
+    mode 'sp':  batch over data + *sequence over model* — Megatron-style
+    sequence parallelism: the per-block TP all-reduce of the full (B, S, D)
+    activation becomes a reduce-scatter(S) going in and an all-gather(S)
+    coming out, cutting per-device TP collective bytes by ~the TP degree
+    (norms/residual adds are elementwise over D, so they run on the
+    S-sharded tensor for free).
+    """
+    mode = activation_sharding_mode()
+    if mode not in ("dp", "sp"):
+        return x
+    if x.shape[0] % 32 != 0:   # must divide the largest dp extent (2x16)
+        return x
+    if mode == "sp" and x.ndim == 3 and x.shape[1] % 16 == 0:
+        return constrain(x, ("pod", "data"), "model", None)
+    return constrain(x, ("pod", "data"), None, None)
+
+
+def current_axis_names() -> tuple[str, ...]:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def _filter_spec(spec: Any, axes: tuple[str, ...]) -> Any:
+    if spec is None:
+        return None
+    if isinstance(spec, (tuple, list)):
+        kept = tuple(a for a in spec if a in axes)
+        return kept if kept else None
+    return spec if spec in axes else None
+
+
+def logical_to_mesh(pspec: P) -> P | None:
+    """Drop unknown axis names from a PartitionSpec for the active mesh."""
+    axes = current_axis_names()
+    if not axes:
+        return None
+    return P(*(_filter_spec(s, axes) for s in pspec))
+
+
+def constrain(x: jax.Array, *spec: Any) -> jax.Array:
+    """with_sharding_constraint that degrades gracefully off-mesh."""
+    resolved = logical_to_mesh(P(*spec))
+    if resolved is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolved)
+
+
+def batch_axes() -> tuple[str, ...] | None:
+    """Axes the global batch shards over: ("pod","data") when both exist."""
+    axes = current_axis_names()
+    got = tuple(a for a in ("pod", "data") if a in axes)
+    return got if got else None

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute hot spots.
+
+  optical_dft      — fused 4f pipeline: DAC quantize + DFT-as-matmul + |.|^2
+  adc_dac          — fused converter-boundary emulation (one VMEM pass)
+  local_attention  — blocked causal/sliding-window flash attention (GQA)
+
+``ops`` holds the public jit wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.common import INTERPRET
+
+__all__ = ["ops", "ref", "INTERPRET"]

@@ -1,0 +1,38 @@
+"""Shared Pallas kernel utilities.
+
+Kernels are written for TPU (explicit BlockSpec VMEM tiling, MXU-aligned
+block shapes) and validated on CPU with ``interpret=True``, which executes
+the kernel body in Python.  ``INTERPRET`` flips automatically.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["INTERPRET", "MXU", "LANE", "SUBLANE", "round_up", "pick_block"]
+
+INTERPRET = jax.default_backend() != "tpu"
+
+# TPU v5e geometry: 128x128 MXU systolic array; (8, 128) float32 VREG tiles.
+MXU = 128
+LANE = 128
+SUBLANE = 8
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_block(dim: int, preferred: int, align: int) -> int:
+    """Largest block <= preferred that divides ``dim``; falls back to dim.
+
+    Keeps MXU alignment when the dimension allows it — callers pad inputs to
+    ``align`` multiples before invoking kernels, so the fallback only fires
+    for deliberately tiny test shapes.
+    """
+    if dim >= preferred and dim % preferred == 0:
+        return preferred
+    b = min(dim, preferred)
+    while b > align and dim % b != 0:
+        b -= align
+    return b if dim % b == 0 else dim

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: blocked causal / sliding-window (local) flash attention.
+
+Used by the RecurrentGemma hybrid blocks (window=2048 local attention) and
+by long-context prefill, where materializing the (L x L) score matrix is the
+memory-roofline killer.  Online-softmax streaming keeps the working set at
+O(block_q x block_k) in VMEM.
+
+Design notes (TPU):
+  * grid = (batch*q_heads, num_q_blocks, num_kv_blocks); the kv axis is the
+    last (sequential) grid dimension so fp32 VMEM scratch (acc, m, l) carries
+    across kv steps — the standard MaxText/TPU flash pattern.
+  * GQA is zero-copy: K/V BlockSpec index maps divide the head index by the
+    group size instead of materializing repeated KV heads.
+  * Fully-masked (q_block, kv_block) tiles still execute in this validation
+    kernel; the production grid prunes them with a lower-triangular +
+    window-band index map (see the `skip` computation — it is exact, and on
+    TPU becomes a `pl.when` guard over the whole body).
+  * Masking uses -1e30 (not -inf) so m stays finite and exp() never NaNs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import INTERPRET, pick_block
+
+__all__ = ["local_flash_attention"]
+
+_NEG = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_sc, l_sc, *,
+                 scale: float, window: int, causal: bool,
+                 bq: int, bk: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_sc[...] = jnp.full_like(m_sc, _NEG)
+        l_sc[...] = jnp.zeros_like(l_sc)
+
+    i = pl.program_id(1)
+    q_idx = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window > 0:
+        mask &= (q_idx - k_idx) < window
+
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+
+    l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1)
+    m_sc[...] = m_new
+    acc[...] = acc[...] * alpha[:, None] + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_sc[...], 1e-20)[:, None]
+        o_ref[0, ...] = (acc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "causal",
+                                             "block_q", "block_k", "kv_groups"))
+def local_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          scale: float | None = None, window: int = 0,
+                          causal: bool = True, block_q: int = 128,
+                          block_k: int = 128, kv_groups: int = 1) -> jax.Array:
+    """Flash attention with optional sliding window.
+
+    Args:
+      q: (BH, Lq, D) — batch*query-heads flattened.
+      k, v: (BHkv, Lk, D) with BHkv = BH // kv_groups (GQA via index maps).
+      window: 0 = unlimited (pure causal); w > 0 = each query attends to at
+        most ``w`` most recent keys (RecurrentGemma local attention).
+      causal: lower-triangular masking (assumes aligned q/k positions).
+    """
+    bh, lq, d = q.shape
+    bhkv, lk, _ = k.shape
+    assert bh == bhkv * kv_groups, (bh, bhkv, kv_groups)
+    if scale is None:
+        scale = d ** -0.5
+    bq = pick_block(lq, block_q, 8)
+    bk = pick_block(lk, block_k, 128)
+    grid = (bh, lq // bq, lk // bk)
+    kern = functools.partial(_attn_kernel, scale=scale, window=window,
+                             causal=causal, bq=bq, bk=bk, nk=grid[2])
+    g = kv_groups
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(q, k, v)

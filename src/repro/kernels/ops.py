@@ -1,0 +1,52 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Models and benchmarks import from here; the raw kernels stay private so the
+BlockSpec plumbing can evolve without touching call sites.  On non-TPU
+backends every kernel runs in ``interpret=True`` mode (bit-accurate Python
+execution of the kernel body).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.adc_dac import converter_boundary
+from repro.kernels.local_attention import local_flash_attention
+from repro.kernels.optical_dft import (
+    dft_matrix_factors,
+    dft_stage1,
+    dft_stage2,
+    optical_dft2_intensity,
+)
+
+__all__ = [
+    "optical_dft2_intensity",
+    "dft_stage1",
+    "dft_stage2",
+    "dft_matrix_factors",
+    "converter_boundary",
+    "local_flash_attention",
+    "gqa_flash_attention",
+]
+
+
+def gqa_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        window: int = 0, causal: bool = True,
+                        block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """(B, Hq, L, D) grouped-query flash attention over 4-D operands.
+
+    Flattens (batch, heads) onto the kernel's leading grid axis; KV heads
+    are shared across groups inside the kernel via index maps (no repeat).
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    groups = hq // hkv
+    out = local_flash_attention(
+        q.reshape(b * hq, lq, d),
+        k.reshape(b * hkv, lk, d),
+        v.reshape(b * hkv, lk, d),
+        window=window, causal=causal, block_q=block_q, block_k=block_k,
+        kv_groups=groups,
+    )
+    return out.reshape(b, hq, lq, d)

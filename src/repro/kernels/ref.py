@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the semantic specification of its kernel; tests sweep
+shapes/dtypes and assert kernel-vs-oracle agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "optical_dft2_intensity_ref",
+    "converter_boundary_ref",
+    "local_attention_ref",
+    "dft_stage1_ref",
+    "dft_stage2_ref",
+]
+
+
+def _quantize(x: jax.Array, bits: int) -> jax.Array:
+    levels = (1 << bits) - 1
+    return jnp.round(jnp.clip(x, 0.0, 1.0) * levels) / levels
+
+
+def dft_stage1_ref(wr, wi, a, *, dac_bits: int = 0):
+    a = a.astype(jnp.float32)
+    if dac_bits:
+        a = _quantize(a, dac_bits)
+    w = wr.astype(jnp.float32) + 1j * wi.astype(jnp.float32)
+    t = w @ a.astype(jnp.complex64)
+    return jnp.real(t), jnp.imag(t)
+
+
+def dft_stage2_ref(tr, ti, wr, wi):
+    t = tr.astype(jnp.float32) + 1j * ti.astype(jnp.float32)
+    w = wr.astype(jnp.float32) + 1j * wi.astype(jnp.float32)
+    u = t @ w.T
+    return jnp.abs(u) ** 2
+
+
+def optical_dft2_intensity_ref(a: jax.Array, *, dac_bits: int = 8) -> jax.Array:
+    """|unitary 2-D DFT of quantize(a)|^2 — matches repro.core.optical."""
+    a = _quantize(a.astype(jnp.float32), dac_bits) if dac_bits else a
+    f = jnp.fft.fft2(a.astype(jnp.complex64), norm="ortho")
+    return jnp.abs(f) ** 2
+
+
+def converter_boundary_ref(x, noise=None, *, dac_bits=8, adc_bits=8,
+                           noise_std=0.0):
+    y = _quantize(x.astype(jnp.float32), dac_bits)
+    if noise is not None and noise_std > 0.0:
+        y = y + noise_std * noise.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(x), 1e-20)
+    z = jnp.clip(y / scale, 0.0, 1.0)
+    levels = (1 << adc_bits) - 1
+    return (jnp.round(z * levels) / levels * scale).astype(x.dtype)
+
+
+def local_attention_ref(q, k, v, *, scale=None, window: int = 0,
+                        causal: bool = True, kv_groups: int = 1):
+    """Dense masked softmax attention, (BH, Lq, D) x (BHkv, Lk, D)."""
+    bh, lq, d = q.shape
+    if scale is None:
+        scale = d ** -0.5
+    if kv_groups > 1:
+        k = jnp.repeat(k, kv_groups, axis=0)
+        v = jnp.repeat(v, kv_groups, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(lq)[:, None]
+    ki = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((lq, k.shape[1]), bool)
+    if causal:
+        mask &= qi >= ki
+    if window > 0:
+        mask &= (qi - ki) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count *before* first jax use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "TP"]
+
+TP = 16  # model-parallel extent of one v5e pod row
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Axes: ``data`` carries batch/FSDP, ``model`` carries TP/EP, ``pod``
+    carries cross-pod data parallelism (batch + gradient reduction only, so
+    per-chip memory is pod-count invariant — elastic over pods).
+    """
+    auto = jax.sharding.AxisType.Auto
+    if multi_pod:
+        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
+                             axis_types=(auto,) * 3)
+    return jax.make_mesh((16, 16), ("data", "model"), axis_types=(auto,) * 2)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Tiny mesh over however many devices the test process has."""
+    auto = jax.sharding.AxisType.Auto
+    return jax.make_mesh(shape, axes, axis_types=(auto,) * len(axes))

@@ -1,0 +1,13 @@
+"""Model substrate: configs, parameter templates, and the LM assembly."""
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+from repro.models.model import LM
+from repro.models.params import (
+    init_params,
+    param_counts,
+    param_pspecs,
+    param_shape_structs,
+)
+
+__all__ = ["ModelConfig", "MoEConfig", "MLAConfig", "LM", "init_params",
+           "param_counts", "param_pspecs", "param_shape_structs"]

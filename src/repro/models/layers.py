@@ -1,0 +1,127 @@
+"""Shared neural-net layers (pure functions over param pytrees)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+__all__ = ["rms_norm", "rope", "mlp_apply", "causal_conv1d", "chunked_ce_loss",
+           "embed_tokens"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0,
+         pct: float = 1.0) -> jax.Array:
+    """Rotary embedding on the last dim. x: (..., S, H, hd); positions: (S,) or (B, S).
+
+    ``pct`` < 1 rotates only the first ``pct * hd`` dims (StableLM-2 partial
+    rotary).  Pairing is (even, odd) interleaved halves: (x1, x2) rotation on
+    split halves of the rotary slice.
+    """
+    hd = x.shape[-1]
+    rot = int(hd * pct)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+        ang = ang[None, :, None, :]                                    # (1,S,1,half)
+    else:
+        ang = positions.astype(jnp.float32)[..., None] * freqs         # (B,S,half)
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:rot].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Dense MLP: swiglu | geglu | relu2 (Nemotron squared-ReLU)."""
+    up = x @ p["w_in"].astype(x.dtype)
+    if cfg.mlp_kind == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(up) * (x @ p["w_gate"].astype(x.dtype))
+    else:  # swiglu
+        h = jax.nn.silu(up) * (x @ p["w_gate"].astype(x.dtype))
+    return h @ p["w_out"].astype(x.dtype)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal temporal conv. x: (B,S,C); w: (K,C); b: (C,).
+
+    Implemented as a sum of K shifted elementwise products (no conv op:
+    stays TP-shardable on C with zero collectives).  ``state`` is the last
+    K-1 inputs from the previous segment, (B, K-1, C); returns (out, new
+    state) so prefill hands decode a warm buffer.
+    """
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)          # (B, S+K-1, C)
+    s = x.shape[1]
+    out = b.astype(x.dtype)
+    for j in range(k):
+        out = out + xp[:, j:j + s, :] * w[j].astype(x.dtype)
+    return out, xp[:, -(k - 1):, :] if k > 1 else jnp.zeros(
+        (x.shape[0], 0, x.shape[2]), x.dtype)
+
+
+def embed_tokens(cfg: ModelConfig, embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0).astype(cfg.activation_dtype)
+
+
+def chunked_ce_loss(cfg: ModelConfig, head: jax.Array, x: jax.Array,
+                    labels: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Cross-entropy with the vocab projection computed in sequence chunks.
+
+    Never materializes the full (B, S, V) logits tensor: peak activation is
+    (B, S/chunks, V_padded) — the single biggest memory-term lever for the
+    256k-vocab archs.  Padded vocab columns are masked with -1e30.
+    labels == -1 means "ignore position".
+    """
+    b, s, d = x.shape
+    chunks = cfg.logit_chunks if s % cfg.logit_chunks == 0 else 1
+    sc = s // chunks
+    vp, v = cfg.padded_vocab, cfg.vocab_size
+    hw = head.astype(cfg.activation_dtype)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        xc, lc = inp                              # (B, sc, D), (B, sc)
+        logits = (xc @ hw.T).astype(jnp.float32)  # (B, sc, Vp)
+        if vp != v:
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(col < v, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        safe = jnp.maximum(lc, 0)
+        lbl = jnp.sum(jnp.where(col == safe[..., None], logits, 0.0), axis=-1)
+        valid = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - lbl) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    xs = (x.reshape(b, chunks, sc, d).swapaxes(0, 1),
+          labels.reshape(b, chunks, sc).swapaxes(0, 1))
+    # checkpoint: backward recomputes each chunk's logits instead of saving
+    # chunks x (B, sc, Vp) fp32 — the whole point of chunking the loss.
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(body),
+                                 (jnp.zeros(()), jnp.zeros(())), xs)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss, {"ce_sum": tot, "n_tokens": cnt}

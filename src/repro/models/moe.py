@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer: shared + routed top-k, sort-based dispatch.
+
+Dispatch strategy (chosen for SPMD friendliness at 256 experts / 512 chips):
+tokens are routed *per batch row* — assignments are sorted along the
+unsharded (S*k) axis, positions-within-expert computed from segment starts,
+and tokens beyond each expert's capacity C = ceil(S*k*cf / E) are dropped
+(standard capacity-factor semantics).  The gathered (B, E, C, D) activation
+is then sharding-constrained to (data, model, ..., ...) so XLA lowers the
+expert exchange as an all-to-all on the ``model`` axis — expert parallelism
+— rather than an all-gather of the full token set.
+
+``shard_mode='ep'``  : expert dim over ``model``  (DeepSeek-V3: 256 experts).
+``shard_mode='tp'``  : each expert's ffn dim over ``model``
+                       (Qwen2-MoE: 60 experts don't divide 16 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+
+__all__ = ["moe_apply"]
+
+
+def _router(cfg: ModelConfig, p: dict, x2d: jax.Array):
+    """x2d: (B, S, D) -> (probs (B,S,k), idx (B,S,k), aux_loss)."""
+    m = cfg.moe
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)
+    if cfg.name.startswith("deepseek"):
+        scores = jax.nn.sigmoid(logits)             # DeepSeek-V3 sigmoid router
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    top, idx = jax.lax.top_k(scores, m.top_k)
+    top = top / jnp.maximum(top.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance auxiliary loss.
+    e = m.n_routed
+    assign = jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(-2)   # (B,S,E)
+    frac = assign.mean(axis=(0, 1)) / m.top_k
+    prob = jax.nn.softmax(logits, axis=-1).mean(axis=(0, 1))
+    aux = m.aux_loss_coef * e * jnp.sum(frac * prob)
+    return top, idx, aux
+
+
+def _shared(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if "ws_in" not in p:
+        return jnp.zeros_like(x)
+    h = jax.nn.silu(x @ p["ws_in"].astype(x.dtype)) * (x @ p["ws_gate"].astype(x.dtype))
+    return h @ p["ws_out"].astype(x.dtype)
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_routed, m.top_k
+    cap = max(-(-s * k * int(4 * m.capacity_factor) // (4 * e)), 1)
+
+    top, idx, aux = _router(cfg, p, x)
+
+    # ---- build per-row dispatch (all along unsharded axes) ----------------
+    flat_e = idx.reshape(b, s * k)                        # expert of each slot
+    flat_t = jnp.repeat(jnp.arange(s), k)[None, :]        # token of each slot
+    flat_t = jnp.broadcast_to(flat_t, (b, s * k))
+    flat_p = top.reshape(b, s * k)
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, -1)
+    st = jnp.take_along_axis(flat_t, order, -1)
+    sp = jnp.take_along_axis(flat_p, order, -1)
+    # position within expert segment
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(se)
+    pos_in_e = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, se, -1)
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, se * cap + pos_in_e, e * cap)  # overflow -> slot E*C
+
+    # token index per (expert, capacity) slot; S = padding token
+    slot_tok = jnp.full((b, e * cap + 1), s, jnp.int32)
+    slot_w = jnp.zeros((b, e * cap + 1), jnp.float32)
+    rows = jnp.arange(b)[:, None]
+    slot_tok = slot_tok.at[rows, dest].set(jnp.where(keep, st, s).astype(jnp.int32))
+    slot_w = slot_w.at[rows, dest].set(jnp.where(keep, sp, 0.0))
+    slot_tok, slot_w = slot_tok[:, :-1], slot_w[:, :-1]
+
+    # ---- gather -> expert compute -> combine ------------------------------
+    xp = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    gx = jnp.take_along_axis(xp, slot_tok[..., None], axis=1)  # (B, E*C, D)
+    gx = gx.reshape(b, e, cap, d)
+    if m.shard_mode == "ep":
+        gx = constrain(gx, ("pod", "data"), "model", None, None)
+
+    w_in = p["we_in"].astype(x.dtype)
+    w_gate = p["we_gate"].astype(x.dtype)
+    w_out = p["we_out"].astype(x.dtype)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", gx, w_in))
+    h = h * jnp.einsum("becd,edf->becf", gx, w_gate)
+    eo = jnp.einsum("becf,efd->becd", h, w_out)            # (B,E,C,D)
+
+    eo = eo.reshape(b, e * cap, d) * slot_w[..., None].astype(x.dtype)
+    out = jnp.zeros((b, s + 1, d), x.dtype)
+    out = out.at[rows, slot_tok].add(eo)[:, :s, :]
+
+    return out + _shared(cfg, p, x), aux

@@ -1,0 +1,17 @@
+"""Optimizers and distributed-optimization tricks (no optax dependency).
+
+  adamw       — AdamW with fp32 state and global-norm clipping
+  adafactor   — factored second moment; the >=70B default (state ~ O(r+c))
+  schedules   — linear-warmup cosine decay
+  compression — int8 error-feedback gradient compression (cross-pod link)
+"""
+
+from repro.optim.adafactor import adafactor
+from repro.optim.adamw import adamw
+from repro.optim.base import Optimizer, apply_updates, global_norm_clip
+from repro.optim.compression import ef_compress, ef_decompress, ef_init
+from repro.optim.schedules import warmup_cosine
+
+__all__ = ["Optimizer", "adamw", "adafactor", "warmup_cosine",
+           "apply_updates", "global_norm_clip", "ef_init", "ef_compress",
+           "ef_decompress"]

@@ -1,0 +1,70 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moment, no momentum.
+
+The optimizer-state footprint is O(rows + cols) per matrix instead of
+O(rows * cols) — the difference between DeepSeek-V3-671B training state
+fitting 16 GB/chip and needing ~16 GB/chip for Adam moments alone
+(DESIGN.md §5).  Update-RMS clipping (d=1.0) replaces global-norm clipping.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+__all__ = ["adafactor"]
+
+
+def adafactor(lr: Callable | float, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, weight_decay: float = 0.0,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor \
+            and shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def one(p):
+            if factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(one, params,
+                                            is_leaf=lambda x: hasattr(x, "shape"))}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(g.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                u = g * (jax.lax.rsqrt(vr / jnp.maximum(denom, eps))[..., None]
+                         * jax.lax.rsqrt(vc)[..., None, :])
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                ns = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            upd = -lr_t * u
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd, ns
+
+        flat = jax.tree_util.tree_map(one, grads, state["v"], params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda x: x[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"v": pick(1)}, {"lr": lr_t}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,49 @@
+"""AdamW (decoupled weight decay), fp32 moments, schedule-aware."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, global_norm_clip
+
+__all__ = ["adamw"]
+
+
+def adamw(lr: Callable | float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm:
+            grads, gn = global_norm_clip(grads, clip_norm)
+        else:
+            gn = jnp.zeros(())
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = -(lr_t * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                          + weight_decay * p.astype(jnp.float32)))
+            return u, m, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda x: x[i], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}, {"grad_norm": gn,
+                                                       "lr": lr_t}
+
+    return Optimizer(init=init, update=update)

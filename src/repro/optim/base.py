@@ -1,0 +1,33 @@
+"""Optimizer interface: pure (init, update) pairs over param pytrees."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "global_norm_clip", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step) ->
+    (updates, new_state, metrics).  Updates are *deltas* added to params."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+
+
+def global_norm_clip(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)

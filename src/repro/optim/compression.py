@@ -1,0 +1,54 @@
+"""Int8 error-feedback gradient compression for the cross-pod link.
+
+At 2+ pods the gradient all-reduce crosses the slow inter-pod boundary —
+the training-time analogue of the paper's conversion bottleneck: data must
+cross an expensive interface before compute can proceed.  Error-feedback
+quantization (Seide et al. 2014; Karimireddy et al. 2019) cuts those bytes
+4x vs fp32 (2x vs bf16) while the residual state keeps the *long-run*
+gradient unbiased.
+
+Usage inside a shard_map'd train step (see repro/train/steps.py):
+
+    q, scale, res = ef_compress(g, res)          # int8 + per-tensor scale
+    q = jax.lax.psum(q.astype(jnp.int16), "pod") # 2 pods: |sum| <= 254
+    g = ef_decompress(q, jax.lax.psum(scale, "pod") / n_pods) / n_pods
+
+The wire payload is the int8/int16 tensor — 2-4x smaller than the bf16
+all-reduce it replaces; §Perf quantifies the collective-term saving.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ef_init", "ef_compress", "ef_decompress"]
+
+_QMAX = 127.0
+
+
+def ef_init(grads):
+    """Residual (error-feedback) state: one fp32 tensor per gradient."""
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _compress_one(g: jax.Array, res: jax.Array):
+    x = g.astype(jnp.float32) + res
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / _QMAX
+    q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    new_res = x - q.astype(jnp.float32) * scale
+    return q, scale, new_res
+
+
+def ef_compress(grads, residuals):
+    """tree of grads -> (int8 tree, scale tree, new residual tree)."""
+    flat = jax.tree_util.tree_map(_compress_one, grads, residuals)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return pick(0), pick(1), pick(2)
+
+
+def ef_decompress(q_tree, scale_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scale_tree)

@@ -1,0 +1,5 @@
+"""Batched serving runtime (continuous batching over fixed cache slots)."""
+
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

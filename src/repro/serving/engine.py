@@ -1,0 +1,127 @@
+"""Batched serving engine: continuous batching over fixed cache slots.
+
+  * ``submit`` queues requests (prompt token lists);
+  * ``step`` admits queued requests into free slots (single-lane prefill,
+    cache splice) and runs ONE batched ``decode_step`` for all slots —
+    the cache carries per-lane positions, so lanes at different depths
+    decode together (continuous batching);
+  * finished sequences (EOS / max_new_tokens / cache full) free slots.
+
+Static shapes: one compilation for prefill (per prompt length bucket) and
+one for decode.  The decode step function is exactly what the decode_32k /
+long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import LM
+
+__all__ = ["Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
+                 max_len: int = 256, eos_id: int | None = None,
+                 prompt_bucket: int = 1) -> None:
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.slots = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.bucket = prompt_bucket
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.cache = self.model.init_cache(batch_slots, max_len)
+        self.last_token = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.live = [False] * batch_slots
+        self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len=max_len))
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def idle(self) -> bool:
+        return not self.queue and not self.active
+
+    # -- internals -------------------------------------------------------------
+    def _splice_slot(self, slot: int, slot_cache: Any) -> None:
+        """Copy a prefilled 1-lane cache into lane ``slot`` of the batch
+        cache (every cache leaf's lane dim is the one sized batch_slots
+        where the source's is 1)."""
+        def put(dst, src):
+            if not hasattr(dst, "ndim") or dst.ndim == 0:
+                return dst
+            for d in range(dst.ndim):
+                if dst.shape[d] == self.slots and src.shape[d] == 1:
+                    idx = [slice(None)] * dst.ndim
+                    idx[d] = slice(slot, slot + 1)
+                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+            return dst
+        self.cache = jax.tree_util.tree_map(put, self.cache, slot_cache)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            req = self.queue.pop(0)
+            plen = len(req.prompt)
+            # optional left-pad bucketing bounds prefill recompiles; pad
+            # tokens occupy real cache slots (set prompt_bucket=1 for exact)
+            pad = (-plen) % self.bucket
+            toks = jnp.asarray([0] * pad + req.prompt, jnp.int32)[None, :]
+            slot_cache, logits = self._prefill(self.params, {"tokens": toks})
+            self._splice_slot(slot, slot_cache)
+            nxt = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(nxt)
+            self.last_token = self.last_token.at[slot, 0].set(nxt)
+            self.live[slot] = True
+            self.active[slot] = req
+
+    def step(self) -> list[Request]:
+        """Admit waiting requests, then one batched decode step."""
+        self._admit()
+        if not self.active:
+            return []
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_token)
+        finished = []
+        pos_host = jax.device_get(self.cache["pos"])
+        for slot, req in list(self.active.items()):
+            nxt = int(jnp.argmax(logits[slot]))
+            req.out_tokens.append(nxt)
+            self.last_token = self.last_token.at[slot, 0].set(nxt)
+            if (self.eos_id is not None and nxt == self.eos_id) \
+                    or len(req.out_tokens) >= req.max_new_tokens \
+                    or int(pos_host[slot]) >= self.max_len - 1:
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+                self.live[slot] = False
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if self.idle():
+                break
+        return done

@@ -1,0 +1,5 @@
+"""Training loop building blocks."""
+
+from repro.train.steps import make_eval_step, make_train_step
+
+__all__ = ["make_train_step", "make_eval_step"]

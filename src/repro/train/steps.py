@@ -1,0 +1,73 @@
+"""Training step construction: grads, microbatch accumulation, optimizer.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for ``jax.jit`` with explicit shardings (see launch/dryrun.py and
+launch/train.py).  Gradient accumulation scans over microbatches with fp32
+accumulators, bounding the activation peak at (1/accum_steps) of the global
+batch — how the 340B/671B train cells fit HBM (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim.base import Optimizer, apply_updates
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_microbatches(batch: dict, accum: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def make_train_step(model: LM, optimizer: Optimizer, *, accum_steps: int = 1,
+                    remat: bool = True) -> Callable:
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum_steps)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc(carry, mb):
+                gs, ls = carry
+                (l, _), g = grad_fn(params, mb)
+                gs = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gs, g)
+                return (gs, ls + l), None
+
+            (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+            metrics = {}
+        updates, new_opt, opt_metrics = optimizer.update(
+            grads, opt_state, params, step)
+        new_params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LM, *, remat: bool = False) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, remat=remat)
+        return {"loss": loss, **metrics}
+    return eval_step

@@ -1,0 +1,158 @@
+"""Hypothesis property tests on the paper-model invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amdahl, complexity
+from repro.core.accelerator import (
+    ANDERSON_MVM,
+    IDEAL_4F,
+    PROTOTYPE_4F,
+    OpticalFourierAcceleratorSpec,
+)
+from repro.core.conversion import ConverterSpec, frontier_gap, pareto_fom_fj
+from repro.core.planner import CategoryProfile, plan_offload
+
+FRACS = st.floats(min_value=0.0, max_value=1.0, allow_nan=False)
+POS = st.floats(min_value=1e-6, max_value=1e6, allow_nan=False)
+
+
+# --- Amdahl (Eq. 2/3) ------------------------------------------------------------
+
+@given(FRACS)
+def test_ideal_speedup_bounds(f):
+    s = amdahl.ideal_speedup(f)
+    assert s >= 1.0
+    if f < 1.0:
+        assert math.isclose(s, 1.0 / (1.0 - f), rel_tol=1e-9)
+
+
+@given(FRACS, st.floats(min_value=1.0, max_value=1e9))
+def test_finite_p_below_ideal(f, p):
+    assert amdahl.speedup(f, p) <= amdahl.ideal_speedup(f) + 1e-9
+    assert amdahl.speedup(f, 1.0) == pytest.approx(1.0)
+
+
+@given(st.floats(min_value=0.0, max_value=0.999),
+       st.floats(min_value=0.0, max_value=0.999))
+def test_speedup_monotonic_in_fraction(f1, f2):
+    lo, hi = sorted((f1, f2))
+    assert amdahl.ideal_speedup(hi) >= amdahl.ideal_speedup(lo) - 1e-12
+
+
+@given(st.floats(min_value=1.0, max_value=1e6))
+def test_required_fraction_inverts_speedup(s):
+    f = amdahl.required_fraction(s)
+    assert 0.0 <= f <= 1.0
+    assert amdahl.ideal_speedup(f) == pytest.approx(s, rel=1e-6)
+
+
+def test_paper_ten_x_rule():
+    assert amdahl.required_fraction(10.0) == pytest.approx(0.9)
+
+
+# --- converters ---------------------------------------------------------------------
+
+@given(st.integers(min_value=2, max_value=16), POS, POS)
+def test_converter_derived_quantities(bits, rate_mhz, power_mw):
+    spec = ConverterSpec("t", "adc", bits, rate_mhz * 1e6, power_mw * 1e-3)
+    assert spec.energy_per_sample_j == pytest.approx(
+        spec.power_w / spec.rate_hz)
+    assert spec.walden_fom_j > 0
+    assert spec.time_for(1000) >= spec.time_for(1000, lanes=10)
+    assert spec.energy_for(2000) == pytest.approx(2 * spec.energy_for(1000))
+
+
+@given(st.floats(min_value=1e6, max_value=1e11),
+       st.floats(min_value=1e6, max_value=1e11))
+def test_pareto_envelope_monotone_in_rate(r1, r2):
+    lo, hi = sorted((r1, r2))
+    assert pareto_fom_fj(hi, "adc") >= pareto_fom_fj(lo, "adc") - 1e-12
+
+
+@given(st.floats(min_value=1.1, max_value=1000.0))
+def test_frontier_gap_scales_with_required_energy(factor):
+    from repro.core.conversion import LIU_2022_ADC
+    import dataclasses
+    better = dataclasses.replace(LIU_2022_ADC, power_w=LIU_2022_ADC.power_w / factor)
+    assert frontier_gap(better) == pytest.approx(
+        frontier_gap(LIU_2022_ADC) * factor, rel=1e-6)
+
+
+# --- step costs -----------------------------------------------------------------------
+
+@given(st.integers(min_value=1, max_value=10_000_000))
+def test_step_cost_components_nonnegative(n):
+    c = PROTOTYPE_4F.step_cost(n)
+    assert c.dac_s >= 0 and c.adc_s >= 0 and c.interface_s >= 0
+    assert c.total_s >= c.conversion_s
+    assert 0.0 <= c.data_movement_fraction <= 1.0
+
+
+@given(st.integers(min_value=1, max_value=1_000_000),
+       st.integers(min_value=1, max_value=1_000_000))
+def test_step_cost_monotone_in_samples(n1, n2):
+    lo, hi = sorted((n1, n2))
+    assert PROTOTYPE_4F.step_cost(hi).total_s >= \
+        PROTOTYPE_4F.step_cost(lo).total_s - 1e-12
+
+
+def test_phase_shifting_costs_four_reads():
+    import dataclasses
+    four = dataclasses.replace(PROTOTYPE_4F, phase_shift_captures=4)
+    one = PROTOTYPE_4F.step_cost(1000)
+    c4 = four.step_cost(1000)
+    assert c4.adc_s == pytest.approx(4 * one.adc_s)
+    assert c4.dac_s == pytest.approx(one.dac_s)  # write path unchanged
+
+
+# --- complexity (Fig. 3) -----------------------------------------------------------------
+
+def test_linear_class_never_crosses():
+    assert complexity.crossover_n("elementwise O(N)", 1.0) is None
+
+
+def test_superlinear_classes_cross():
+    for name in ("fft O(N log N)", "matvec O(N^2)", "ising O(2^N)"):
+        assert complexity.crossover_n(name, 1.0) is not None
+
+
+@given(st.floats(min_value=4, max_value=1e6))
+def test_matvec_advantage_grows(n):
+    assert complexity.advantage("matvec O(N^2)", 2 * n) > \
+        complexity.advantage("matvec O(N^2)", n)
+
+
+# --- planner (§4-§6) -------------------------------------------------------------------
+
+@given(st.floats(min_value=1e-6, max_value=100.0),
+       st.floats(min_value=1e-6, max_value=100.0),
+       st.integers(min_value=1, max_value=10_000_000))
+@settings(max_examples=50)
+def test_plan_never_slower_and_bounded_by_amdahl(host_fft, host_other, n):
+    profs = [
+        CategoryProfile("fft", host_s=host_fft, calls=1, samples_in=n,
+                        samples_out=n),
+        CategoryProfile("other", host_s=host_other),
+    ]
+    plan = plan_offload(profs, PROTOTYPE_4F)
+    assert plan.end_to_end_speedup >= 1.0 - 1e-9          # never offload a loss
+    assert plan.end_to_end_speedup <= plan.ideal_speedup + 1e-9
+
+
+def test_ideal_accelerator_reaches_amdahl_bound():
+    profs = [CategoryProfile("fft", host_s=9.0, calls=1, samples_in=100,
+                             samples_out=100),
+             CategoryProfile("other", host_s=1.0)]
+    plan = plan_offload(profs, IDEAL_4F)
+    assert plan.end_to_end_speedup == pytest.approx(plan.ideal_speedup, rel=1e-3)
+    assert plan.ideal_speedup == pytest.approx(10.0, rel=1e-3)
+
+
+def test_mvm_accelerator_ignores_fft_category():
+    profs = [CategoryProfile("fft", host_s=10.0, calls=1, samples_in=100,
+                             samples_out=100)]
+    plan = plan_offload(profs, ANDERSON_MVM)
+    assert plan.end_to_end_speedup == pytest.approx(1.0)

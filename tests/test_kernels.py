@@ -1,0 +1,126 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, dtype)
+
+
+# --- optical DFT pipeline -------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(128, 128), (256, 128), (128, 384),
+                                   (8, 128), (256, 256)])
+@pytest.mark.parametrize("dac_bits", [0, 6, 8])
+def test_optical_dft_intensity_sweep(shape, dac_bits):
+    a = _rand(1, shape)
+    got = ops.optical_dft2_intensity(a, dac_bits=dac_bits)
+    want = ref.optical_dft2_intensity_ref(a, dac_bits=dac_bits)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * float(want.max()))
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
+                                   (8, 256, 128)])
+def test_dft_stage1_matches_ref(m, k, n):
+    wr, wi = ops.dft_matrix_factors(k)
+    wr = wr[:m] if m <= k else jnp.tile(wr, (m // k, 1))
+    wi = wi[:m] if m <= k else jnp.tile(wi, (m // k, 1))
+    a = _rand(2, (k, n))
+    tr, ti = ops.dft_stage1(wr, wi, a, dac_bits=8)
+    rr, ri = ref.dft_stage1_ref(wr, wi, a, dac_bits=8)
+    np.testing.assert_allclose(tr, rr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(ti, ri, rtol=1e-4, atol=1e-5)
+
+
+def test_dft_stage2_matches_ref():
+    tr, ti = _rand(3, (128, 256)), _rand(4, (128, 256))
+    wr, wi = ops.dft_matrix_factors(256)
+    wr, wi = wr[:128], wi[:128]
+    got = ops.dft_stage2(tr, ti, wr, wi)
+    want = ref.dft_stage2_ref(tr, ti, wr, wi)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_optical_dft_matches_physics_sim():
+    """Kernel pipeline == the core physics model (amplitude encoding)."""
+    from repro.core.optical import OpticalSimParams, optical_fft2_magnitude
+    a = _rand(5, (128, 128))
+    intensity = ops.optical_dft2_intensity(a, dac_bits=8)
+    mag = optical_fft2_magnitude(a, OpticalSimParams(dac_bits=8, adc_bits=16))
+    # the core sim additionally ADC-quantizes the intensity (16-bit,
+    # auto-ranged to the DC peak), so compare at that quantizer's step size
+    step = float(jnp.max(mag) ** 2) / (2 ** 16 - 1)
+    np.testing.assert_allclose(intensity, mag ** 2, rtol=1e-3, atol=2 * step)
+
+
+# --- converter boundary -----------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (64, 256), (256, 512), (16, 384)])
+@pytest.mark.parametrize("bits", [(6, 8), (8, 8), (4, 12)])
+def test_converter_boundary_sweep(shape, bits):
+    dac, adc = bits
+    x = _rand(6, shape)
+    nz = jax.random.normal(jax.random.PRNGKey(7), shape)
+    got = ops.converter_boundary(x, nz, dac_bits=dac, adc_bits=adc,
+                                 noise_std=0.02)
+    want = ref.converter_boundary_ref(x, nz, dac_bits=dac, adc_bits=adc,
+                                      noise_std=0.02)
+    # fp association order can flip round-to-nearest ties by one ADC step
+    np.testing.assert_allclose(got, want, rtol=1e-6,
+                               atol=1.5 / ((1 << adc) - 1))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_converter_boundary_dtypes(dtype):
+    x = _rand(8, (32, 128)).astype(dtype)
+    got = ops.converter_boundary(x, dac_bits=8, adc_bits=8)
+    want = ref.converter_boundary_ref(x, dac_bits=8, adc_bits=8)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+# --- flash attention ----------------------------------------------------------------
+
+@pytest.mark.parametrize("lq,lk,d", [(128, 128, 64), (256, 128, 32),
+                                     (128, 256, 64)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(lq, lk, d, causal, window):
+    if causal and lq > lk:
+        pytest.skip("causal alignment assumes lq <= lk")
+    q = jax.random.normal(jax.random.PRNGKey(1), (4, lq, d))
+    k = jax.random.normal(jax.random.PRNGKey(2), (2, lk, d))
+    v = jax.random.normal(jax.random.PRNGKey(3), (2, lk, d))
+    got = ops.local_flash_attention(q, k, v, causal=causal, window=window,
+                                    kv_groups=2, block_q=64, block_k=64)
+    want = ref.local_attention_ref(q, k, v, causal=causal, window=window,
+                                   kv_groups=2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(4), (2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(5), (2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(6), (2, 128, 64), jnp.bfloat16)
+    got = ops.local_flash_attention(q, k, v, causal=True)
+    want = ref.local_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_gqa_4d_wrapper():
+    q = jax.random.normal(jax.random.PRNGKey(7), (2, 8, 128, 32))
+    k = jax.random.normal(jax.random.PRNGKey(8), (2, 2, 128, 32))
+    v = jax.random.normal(jax.random.PRNGKey(9), (2, 2, 128, 32))
+    got = ops.gqa_flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.local_attention_ref(
+        q.reshape(16, 128, 32), k.reshape(4, 128, 32), v.reshape(4, 128, 32),
+        causal=True, kv_groups=4).reshape(2, 8, 128, 32)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,105 @@
+"""Physics-sim correctness: the 4f accelerator model vs FFT oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optical import (
+    OpticalSimParams,
+    dac_quantize,
+    adc_quantize,
+    fourier_mask_for_kernel,
+    macro_pixel_aggregate,
+    optical_conv2d,
+    optical_fft2_complex,
+    optical_fft2_magnitude,
+    slm_crosstalk,
+)
+
+HI_FI = OpticalSimParams(dac_bits=16, adc_bits=16)
+
+
+def test_magnitude_matches_fft():
+    a = jax.random.uniform(jax.random.PRNGKey(0), (64, 64))
+    got = optical_fft2_magnitude(a, HI_FI)
+    want = jnp.abs(jnp.fft.fft2(a, norm="ortho"))
+    np.testing.assert_allclose(got, want, atol=0.1)  # sqrt near 0 is touchy
+    # intensity comparison is the physically-meaningful one
+    np.testing.assert_allclose(got ** 2, want ** 2, rtol=1e-2,
+                               atol=1e-3 * float((want ** 2).max()))
+
+
+def test_complex_recovery_matches_fft():
+    a = jax.random.uniform(jax.random.PRNGKey(1), (64, 64))
+    got = optical_fft2_complex(a, HI_FI)
+    want = jnp.fft.fft2(a, norm="ortho")
+    np.testing.assert_allclose(jnp.abs(got - want).max(), 0.0, atol=2e-2)
+
+
+def test_optical_conv_matches_circular_conv():
+    a = jax.random.uniform(jax.random.PRNGKey(2), (64, 64))
+    k = jnp.zeros((64, 64)).at[0, 0].set(0.6).at[0, 1].set(0.3).at[2, 3].set(0.1)
+    mask = fourier_mask_for_kernel(k, params=HI_FI)
+    got = optical_conv2d(a, mask, HI_FI)
+    want = jnp.real(jnp.fft.ifft2(jnp.fft.fft2(a) * jnp.fft.fft2(k)))
+    np.testing.assert_allclose(got, want, atol=5e-2)
+
+
+def test_quantization_bits_monotonic():
+    """More converter bits => lower reconstruction error (physics sanity)."""
+    a = jax.random.uniform(jax.random.PRNGKey(3), (64, 64))
+    oracle = jnp.abs(jnp.fft.fft2(a, norm="ortho")) ** 2
+    errs = []
+    for bits in (2, 4, 8, 12):
+        p = OpticalSimParams(dac_bits=bits, adc_bits=bits)
+        got = optical_fft2_magnitude(a, p) ** 2
+        errs.append(float(jnp.mean(jnp.abs(got - oracle))))
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_dac_quantize_levels():
+    x = jnp.linspace(0, 1, 1000)
+    q = dac_quantize(x, 3)
+    assert len(np.unique(np.asarray(q))) <= 8
+    np.testing.assert_allclose(q, x, atol=1.0 / (2 * 7) + 1e-6)
+
+
+def test_adc_quantize_autorange():
+    x = jnp.asarray([0.0, 5.0, 10.0])
+    q = adc_quantize(x, 8)
+    np.testing.assert_allclose(q, x, atol=10.0 / 255 + 1e-6)
+
+
+def test_macro_pixel_reduces_resolution():
+    x = jax.random.uniform(jax.random.PRNGKey(4), (66, 66))
+    y = macro_pixel_aggregate(x, 3)
+    assert y.shape == (22, 22)
+    np.testing.assert_allclose(y[0, 0], x[:3, :3].mean(), rtol=1e-6)
+
+
+def test_crosstalk_preserves_mean():
+    x = jax.random.uniform(jax.random.PRNGKey(5), (32, 32))
+    y = slm_crosstalk(x, 0.05)
+    np.testing.assert_allclose(y.mean(), x.mean(), rtol=1e-5)
+    assert not np.allclose(y, x)
+
+
+def test_noise_changes_output_and_stays_nonnegative():
+    p = OpticalSimParams(dac_bits=8, adc_bits=8, shot_noise=0.01,
+                         read_noise=0.001)
+    a = jax.random.uniform(jax.random.PRNGKey(6), (32, 32))
+    m1 = optical_fft2_magnitude(a, p, key=jax.random.PRNGKey(1))
+    m2 = optical_fft2_magnitude(a, p, key=jax.random.PRNGKey(2))
+    assert not np.allclose(m1, m2)
+    assert float(m1.min()) >= 0.0
+
+
+def test_differentiable_through_pipeline():
+    """STE quantizers keep the whole accelerator differentiable."""
+    a = jax.random.uniform(jax.random.PRNGKey(7), (16, 16))
+    p = OpticalSimParams(dac_bits=6, adc_bits=6)
+    g = jax.grad(lambda x: jnp.sum(optical_fft2_magnitude(x, p) ** 2))(a)
+    assert g.shape == a.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(jnp.abs(g).max()) > 0.0
