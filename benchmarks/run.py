@@ -68,6 +68,11 @@ def main() -> None:
               f"|worthwhile={row['mvm_worthwhile']}"
               f"|conversion_bound={row['mvm_conversion_bound']}")
 
+    # --- Offload runtime: batching amortization + telemetry round trip ---------------
+    from benchmarks.runtime_bench import run as runtime_bench
+    for row in runtime_bench():
+        print(row)
+
     # --- Roofline (needs dry-run artifacts) -------------------------------------------
     import os
     try:

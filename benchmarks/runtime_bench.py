@@ -1,0 +1,124 @@
+"""Runtime benchmark: batching amortizes the conversion boundary.
+
+Two claims, measured on the executing runtime (not just the cost model):
+
+* **Amortization sweep** — submitting K same-shape FFT offload calls and
+  letting the executor coalesce them reduces the modeled per-call
+  conversion + interface time monotonically in K (the paper's §6 lever:
+  one link handshake, one SLM settle, one lane-ceil residue per batch
+  instead of per call).
+* **Telemetry round trip** — traffic profiled by the runtime itself feeds
+  ``plan_offload`` and yields a plan whose offload decisions match how the
+  router then executes (categories the plan offloads run on the analog
+  backend, the rest stay host).
+
+Run:  PYTHONPATH=src python -m benchmarks.runtime_bench
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.runtime import BATCHED_4F, OffloadExecutor, PlanRouter
+
+# 512x512 frames: large enough that the host FFT genuinely costs ms while
+# 16 of them still pack into one 2048x2048 SLM frame (one frame-sync).
+SHAPE = (512, 512)
+CALLS = 16
+
+
+def _images(n: int = CALLS):
+    key = jax.random.PRNGKey(7)
+    return [jax.random.uniform(jax.random.fold_in(key, i), SHAPE)
+            for i in range(n)]
+
+
+def sweep(batch_sizes=(1, 2, 4, 8, 16)) -> list[dict]:
+    """Per-call boundary cost vs executor batch ceiling, CALLS fft calls."""
+    imgs = _images()
+    rows = []
+    for k in batch_sizes:
+        ex = OffloadExecutor(BATCHED_4F, max_batch=k)
+        handles = [ex.submit("fft", im) for im in imgs]
+        t0 = time.perf_counter()
+        ex.flush()
+        wall = time.perf_counter() - t0
+        # per-call share of the modeled batched invocation cost, averaged
+        # over the calls (the tail batch may be smaller than k)
+        per_call = [h.cost.conversion_s + h.cost.interface_s for h in handles]
+        total = [h.cost.total_s for h in handles]
+        rows.append({
+            "max_batch": k,
+            "boundary_s_per_call": sum(per_call) / len(per_call),
+            "modeled_s_per_call": sum(total) / len(total),
+            "wall_s_per_call": wall / len(handles),
+            "invocations": ex.telemetry.stats[("fft", "optical-sim")].invocations,
+        })
+    return rows
+
+
+def roundtrip() -> dict:
+    """Profile on host -> plan from telemetry -> execute -> compare."""
+    imgs = _images()
+    ex = OffloadExecutor(BATCHED_4F, max_batch=16)
+    router = PlanRouter(ex)
+    # prime the jit caches so one-time compilation does not masquerade as
+    # measured per-call host time in the profiles
+    ex.warm("fft", imgs[0], backend="host")
+    # submit in groups: replan() prices amortization at the *observed*
+    # queue occupancy, so serial submission would (correctly) earn none
+    ex.telemetry.start()
+    for h in [router.submit("fft", im) for im in imgs]:
+        h.get()
+    ex.telemetry.stop()
+    plan = router.replan()
+    for h in [router.submit("fft", im) for im in imgs]:
+        h.get()
+    planned_offload = {d.category: d.offload for d in plan.decisions
+                       if d.category != "other"}
+    executed_on = {
+        cat: [b for (c, b) in ex.telemetry.stats if c == cat]
+        for cat in planned_offload
+    }
+    matches = all(
+        ("optical-sim" in executed_on[cat]) == off
+        for cat, off in planned_offload.items())
+    return {
+        "plan_speedup": plan.end_to_end_speedup,
+        "planned_offload": planned_offload,
+        "executed_on": executed_on,
+        "decisions_match_execution": matches,
+    }
+
+
+def run() -> list[str]:
+    """CSV rows per the harness contract: section,name,us_per_call,derived."""
+    rows = []
+    base = None
+    for r in sweep():
+        if base is None:
+            base = r["boundary_s_per_call"]
+        rows.append(
+            f"runtime,batch{r['max_batch']},"
+            f"{1e6 * r['boundary_s_per_call']:.1f},"
+            f"conv+intf_amortization={base / max(r['boundary_s_per_call'], 1e-12):.2f}x"
+            f"|modeled_total={1e6 * r['modeled_s_per_call']:.1f}us"
+            f"|invocations={r['invocations']}")
+    rt = roundtrip()
+    rows.append(
+        f"runtime,roundtrip,,speedup={rt['plan_speedup']:.2f}x"
+        f"|offload={rt['planned_offload']}"
+        f"|match={rt['decisions_match_execution']}")
+    return rows
+
+
+def main() -> None:
+    print("section,name,us_per_call,derived")
+    for row in run():
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,89 +1,102 @@
-"""Offload a CNN's convolutions to the simulated optical accelerator.
+"""Run a CNN workload through the conversion-aware offload runtime.
 
-The paper's App. C benchmark 23 (CNN inference), made concrete: run the
-network digitally, then run it with every conv layer routed through the
-4f physics simulator (DAC -> SLM -> diffraction -> detector -> ADC), and
-price the offload with the honest conversion-cost model.
+The seed version of this example *priced* offload (profile -> plan ->
+print).  This version *executes* the loop the paper implies:
 
-Shows all three of the paper's findings at once:
-  * functionally the optics compute the right thing (accuracy gap small);
-  * the conversion boundary dominates the accelerator's wall time;
-  * Amdahl caps the end-to-end win because only convs offload.
+  1. profile   — serve the conv workload through the runtime's host backend;
+                 telemetry measures per-category time and boundary traffic;
+  2. plan      — ``PlanRouter.replan()`` prices the measured profiles on the
+                 prototype 4f engine (spoiler: the conversion boundary loses,
+                 the paper's conclusion) and on a batched column-parallel
+                 variant;
+  3. execute   — apply the plan: conv traffic routes through the simulated
+                 optical engine, same-shape calls coalesce into batched
+                 invocations that amortize the per-call boundary costs;
+  4. verify    — every offloaded batch is shadowed by the host reference and
+                 scored against the converters' ENOB budget, so the speedup
+                 story is always paired with its accuracy cost.
 
 Run:  PYTHONPATH=src python examples/optical_offload.py
 """
 
-import time
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (
-    PROTOTYPE_4F,
-    CategoryProfile,
-    OpticalSimParams,
-    OpProfiler,
-    fourier_mask_for_kernel,
-    optical_conv2d,
-    plan_offload,
-)
+from repro.core import PROTOTYPE_4F
+from repro.runtime import BATCHED_4F, FidelityChecker, OffloadExecutor, PlanRouter
 
 
-def conv_digital(x: jax.Array, k: jax.Array) -> jax.Array:
-    """Per-channel circular conv via FFT (the op the optics replace)."""
-    return jnp.real(jnp.fft.ifft2(jnp.fft.fft2(x) * jnp.fft.fft2(k)))
+def conv_stack(router: PlanRouter, imgs, kernels) -> list[jax.Array]:
+    """3-layer circular-conv + relu stack over a batch of images.
 
-
-def conv_optical(x: jax.Array, k: jax.Array, params, key) -> jax.Array:
-    mask = fourier_mask_for_kernel(k, params=params)     # amortized per kernel
-    xm = jnp.maximum(x.max(), 1e-9)
-    return optical_conv2d(x / xm, mask, params, key) * xm
+    Convolutions go through the router (host or optical per the current
+    plan); the nonlinearities stay on the host — the paper's §3 point that
+    inter-layer nonlinearity forces a conversion round trip per layer.
+    """
+    outs = list(imgs)
+    for k in kernels:
+        handles = [router.submit("conv", x, kernel=k) for x in outs]
+        router.flush()                       # one batched boundary crossing
+        outs = [jax.nn.relu(h.value) for h in handles]
+        for o in outs:
+            o.block_until_ready()
+    return outs
 
 
 def main() -> None:
     key = jax.random.PRNGKey(0)
-    params = OpticalSimParams(dac_bits=8, adc_bits=12)
-    img = jax.random.uniform(key, (64, 64))
-    kernels = [jnp.zeros((64, 64)).at[:5, :5].set(
-        0.04 * jax.random.normal(jax.random.fold_in(key, i), (5, 5)))
-        for i in range(3)]
+    # 512x512 frames: the regime where the host FFT costs real milliseconds
+    # and 8 inputs still pack into one 2048x2048 SLM frame (one frame-sync).
+    imgs = [jax.random.uniform(jax.random.fold_in(key, i), (512, 512))
+            for i in range(8)]
+    # 5x5 taps around an identity center: keeps each layer's output norm
+    # comparable to its input (a near-cancelling kernel would amplify the
+    # boundary's relative error — the fidelity checker flags such cases).
+    kernels = [jnp.zeros((512, 512)).at[:5, :5].set(
+        0.04 * jax.random.normal(jax.random.fold_in(key, 100 + i), (5, 5)))
+        .at[0, 0].add(0.5) for i in range(3)]
 
-    # --- functional comparison: digital vs optical conv stack ---------------
-    dig = opt = img
-    for i, k in enumerate(kernels):
-        dig = jax.nn.relu(conv_digital(dig, k))
-        opt = jax.nn.relu(conv_optical(opt, k, params,
-                                       jax.random.fold_in(key, 100 + i)))
-    rel = float(jnp.linalg.norm(dig - opt) / jnp.maximum(
-        jnp.linalg.norm(dig), 1e-9))
-    print(f"3-layer conv stack, digital vs optical: rel error {rel:.4f}")
+    fidelity = FidelityChecker()
+    executor = OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16)
+    router = PlanRouter(executor)            # starts all-host: profiling mode
 
-    # --- profile the digital app, then price offload ------------------------
-    prof = OpProfiler()
-    prof.start()
-    x = img
-    for k in kernels:
-        x = prof.run("conv", conv_digital, x, k)
-        x = jax.nn.relu(x)                      # 'other' (host nonlinearity:
-        x.block_until_ready()                   # the paper's §3 point)
-    head = x.reshape(-1) @ jax.random.normal(key, (64 * 64, 10))
-    jax.nn.softmax(head).block_until_ready()
-    prof.stop()
+    # --- 1. profile: measured traffic, no hand-written numbers --------------
+    executor.warm("conv", imgs[0], kernel=kernels[0], backend="host")
+    executor.telemetry.start()
+    host_out = conv_stack(router, imgs, kernels)
+    executor.telemetry.stop()
+    print(executor.telemetry.summary())
 
-    profiles = [
-        CategoryProfile("conv", host_s=prof.seconds["conv"],
-                        calls=prof.calls["conv"],
-                        samples_in=prof.samples_in["conv"],
-                        samples_out=prof.samples_out["conv"]),
-        CategoryProfile("other",
-                        host_s=prof.total_s - prof.seconds["conv"]),
-    ]
-    plan = plan_offload(profiles, PROTOTYPE_4F)
+    # --- 2. plan: price the observed workload --------------------------------
+    proto_plan = router.replan(spec=PROTOTYPE_4F, apply=False, max_batch=1)
+    print("\n-- measured plan on the paper's prototype (Fig. 8 links) --")
+    print(proto_plan.summary())
+    print("paper's conclusion, reproduced from *measured* traffic: "
+          f"offload chosen = {any(d.offload for d in proto_plan.decisions)}")
+
+    plan = router.replan()                   # batched-4f spec; applies routes
+    print("\n-- measured plan on the batched column-parallel variant --")
     print(plan.summary())
-    print("\npaper's conclusion, reproduced: the nonlinearity between conv "
-          "layers forces a full conversion round-trip per layer (§3); with "
-          "honest DAC/ADC+interface costs the prototype never wins "
-          f"(offload chosen: {any(d.offload for d in plan.decisions)}).")
+    print(f"routes now: {router.routes}")
+
+    # --- 3. execute the plan: conv through the optical engine ----------------
+    opt_out = conv_stack(router, imgs, kernels)
+    rel = max(float(jnp.linalg.norm(h - o) / jnp.maximum(
+        jnp.linalg.norm(h), 1e-9)) for h, o in zip(host_out, opt_out))
+    conv_stats = executor.telemetry.stats.get(("conv", "optical-sim"))
+    if conv_stats is not None:
+        per_call = conv_stats.modeled.scaled(1.0 / max(conv_stats.calls, 1))
+        single = dataclasses.replace(
+            BATCHED_4F, phase_shift_captures=4).step_cost(512 * 512)
+        print(f"\nbatched boundary cost/call: conv+interface "
+              f"{per_call.conversion_s + per_call.interface_s:.4g}s "
+              f"(unbatched would pay {single.conversion_s + single.interface_s:.4g}s)")
+
+    # --- 4. verify: the accuracy cost of the speedup --------------------------
+    print(f"\nend-to-end stack divergence vs host: rel error {rel:.4f}")
+    print(fidelity.summary())
 
 
 if __name__ == "__main__":

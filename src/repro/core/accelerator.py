@@ -69,6 +69,14 @@ class StepCost:
         return StepCost(self.dac_s * k, self.adc_s * k, self.interface_s * k,
                         self.analog_s * k, self.host_s * k)
 
+    def __add__(self, other: "StepCost") -> "StepCost":
+        if not isinstance(other, StepCost):
+            return NotImplemented
+        return StepCost(self.dac_s + other.dac_s, self.adc_s + other.adc_s,
+                        self.interface_s + other.interface_s,
+                        self.analog_s + other.analog_s,
+                        self.host_s + other.host_s)
+
 
 @dataclasses.dataclass(frozen=True)
 class OpticalFourierAcceleratorSpec:
@@ -90,6 +98,11 @@ class OpticalFourierAcceleratorSpec:
         (Anderson et al. aggregate 3x3 -> macro_pixel=3, costing 9x pixels).
       phase_shift_captures: captures per result; 1 = magnitude-only detector,
         4 = four-step phase-shifting interferometry (complex recovery).
+      interface_latency_s: fixed host<->peripheral round-trip latency charged
+        once per accelerator invocation (link handshake / frame sync — e.g.
+        one 60 Hz display frame period for the prototype's USB/DSI links).
+        This is the term batching amortizes (§6); 0 preserves the paper's
+        throughput-only calibration.
     """
 
     name: str
@@ -105,6 +118,7 @@ class OpticalFourierAcceleratorSpec:
     path_length_m: float = 0.5
     macro_pixel: int = 1
     phase_shift_captures: int = 1
+    interface_latency_s: float = 0.0
 
     @property
     def usable_pixels(self) -> int:
@@ -129,8 +143,38 @@ class OpticalFourierAcceleratorSpec:
         dac_s = self.dac.time_for(n_in, self.dac_lanes)
         adc_s = self.adc.time_for(n_out, self.adc_lanes) * caps
         interface_s = (n_in / self.slm_interface_hz
-                       + caps * n_out / self.camera_interface_hz)
+                       + caps * n_out / self.camera_interface_hz
+                       + self.interface_latency_s)
         analog_s = (self.slm_settle_s + self.exposure_s) * caps + self.time_of_flight_s()
+        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=interface_s,
+                        analog_s=analog_s, host_s=host_s)
+
+    def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
+                          batch: int = 1, host_s: float = 0.0) -> StepCost:
+        """Cost of one invocation carrying ``batch`` same-shape inputs.
+
+        The batch is packed spatially onto the aperture (the runtime's §6
+        amortization lever): the converters still touch every sample
+        (conversion stays C = 2N per datum), but the fixed per-invocation
+        costs — link handshake latency, SLM settle, exposure — are charged
+        once per *frame* instead of once per call, and lane-parallel
+        converters amortize their ceil() residue across the whole batch.
+        ``batch=1`` reproduces :meth:`step_cost` exactly whenever the input
+        fits one frame.
+        """
+        if n_out is None:
+            n_out = n_in
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        caps = self.phase_shift_captures
+        frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
+        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
+        interface_s = (batch * n_in / self.slm_interface_hz
+                       + caps * batch * n_out / self.camera_interface_hz
+                       + frames * self.interface_latency_s)
+        analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
+                    + self.time_of_flight_s())
         return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=interface_s,
                         analog_s=analog_s, host_s=host_s)
 
@@ -159,6 +203,7 @@ class OpticalMVMAcceleratorSpec:
     adc_lanes: int = 512
     optical_pass_s: float = 1.0e-9
     mac_energy_j: float = 1.0e-17  # sub-fJ optical MAC (their claim)
+    interface_latency_s: float = 0.0  # per-invocation host<->engine handshake
 
     def macs_per_pass(self) -> int:
         return self.rows * self.cols
@@ -166,8 +211,22 @@ class OpticalMVMAcceleratorSpec:
     def step_cost(self, n_in: int, n_out: int, host_s: float = 0.0) -> StepCost:
         dac_s = self.dac.time_for(n_in, self.dac_lanes)
         adc_s = self.adc.time_for(n_out, self.adc_lanes)
-        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=0.0,
+        return StepCost(dac_s=dac_s, adc_s=adc_s,
+                        interface_s=self.interface_latency_s,
                         analog_s=self.optical_pass_s, host_s=host_s)
+
+    def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
+                          batch: int = 1, host_s: float = 0.0) -> StepCost:
+        """One invocation streaming ``batch`` same-shape activation sets."""
+        if n_out is None:
+            n_out = n_in
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(batch * n_out, self.adc_lanes)
+        return StepCost(dac_s=dac_s, adc_s=adc_s,
+                        interface_s=self.interface_latency_s,
+                        analog_s=batch * self.optical_pass_s, host_s=host_s)
 
     def matmul_cost(self, m: int, k: int, n: int) -> StepCost:
         """Cost of an (m,k) @ (k,n) matmul tiled onto the optical core.

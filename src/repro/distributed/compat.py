@@ -1,0 +1,57 @@
+"""jax version compatibility for mesh construction and activation.
+
+The repo targets the current jax mesh API (``jax.make_mesh(...,
+axis_types=...)`` + ``jax.set_mesh`` + ``jax.sharding.get_abstract_mesh``)
+but must also run on jax 0.4.x, where axis types don't exist, the context
+mesh is the ``with mesh:`` resource env, and the abstract mesh is not
+threaded through tracing.  All mesh touch-points go through this module so
+the rest of the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_auto_mesh", "enter_mesh", "current_mesh_axis_names"]
+
+
+def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    try:
+        auto = jax.sharding.AxisType.Auto
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(auto,) * len(axes))
+    except (AttributeError, TypeError):  # jax 0.4.x: no axis_types
+        return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def enter_mesh(mesh: jax.sharding.Mesh) -> None:
+    """Make ``mesh`` the context mesh for the rest of the process.
+
+    New jax: ``jax.set_mesh``.  jax 0.4.x: enter the ``with mesh:`` resource
+    env and deliberately never exit (callers are process-scoped scripts —
+    dry-run cells and subprocess lowering tests)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        set_mesh(mesh)
+    else:
+        mesh.__enter__()
+
+
+def current_mesh_axis_names() -> tuple[str, ...]:
+    """Axis names of the active (abstract or resource-env) context mesh."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is None:
+        from jax._src import mesh as _mesh_lib
+        get_abstract = getattr(_mesh_lib, "get_abstract_mesh", lambda: None)
+    mesh = get_abstract()
+    if mesh is not None and not getattr(mesh, "empty", True):
+        return tuple(mesh.axis_names)
+    try:  # jax 0.4.x ``with mesh:`` resource env
+        from jax._src import mesh as _mesh_lib
+        env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+        if not env_mesh.empty:
+            return tuple(env_mesh.axis_names)
+    except (ImportError, AttributeError):
+        pass
+    return ()

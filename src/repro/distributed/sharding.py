@@ -51,10 +51,8 @@ def constrain_residual(x: jax.Array) -> jax.Array:
 
 
 def current_axis_names() -> tuple[str, ...]:
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
-        return ()
-    return tuple(mesh.axis_names)
+    from repro.distributed.compat import current_mesh_axis_names
+    return current_mesh_axis_names()
 
 
 def _filter_spec(spec: Any, axes: tuple[str, ...]) -> Any:

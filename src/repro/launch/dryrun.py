@@ -243,7 +243,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     fn, args, in_sh, out_sh, donate, extras = build_cell(arch, shape_name, mesh)
-    jax.set_mesh(mesh)   # context mesh: makes with_sharding_constraint live
+    from repro.distributed.compat import enter_mesh
+    enter_mesh(mesh)   # context mesh: makes with_sharding_constraint live
     with mesh:
         lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=donate).lower(*args)

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.compat import make_auto_mesh
+
 __all__ = ["make_production_mesh", "make_test_mesh", "TP"]
 
 TP = 16  # model-parallel extent of one v5e pod row
@@ -21,14 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     carries cross-pod data parallelism (batch + gradient reduction only, so
     per-chip memory is pod-count invariant — elastic over pods).
     """
-    auto = jax.sharding.AxisType.Auto
     if multi_pod:
-        return jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
-                             axis_types=(auto,) * 3)
-    return jax.make_mesh((16, 16), ("data", "model"), axis_types=(auto,) * 2)
+        return make_auto_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_auto_mesh((16, 16), ("data", "model"))
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")) -> jax.sharding.Mesh:
     """Tiny mesh over however many devices the test process has."""
-    auto = jax.sharding.AxisType.Auto
-    return jax.make_mesh(shape, axes, axis_types=(auto,) * len(axes))
+    return make_auto_mesh(shape, axes)

@@ -9,9 +9,9 @@
 from repro.optim.adafactor import adafactor
 from repro.optim.adamw import adamw
 from repro.optim.base import Optimizer, apply_updates, global_norm_clip
-from repro.optim.compression import ef_compress, ef_decompress, ef_init
+from repro.optim.compression import ef_compress, ef_decompress, ef_init, ef_scale
 from repro.optim.schedules import warmup_cosine
 
 __all__ = ["Optimizer", "adamw", "adafactor", "warmup_cosine",
            "apply_updates", "global_norm_clip", "ef_init", "ef_compress",
-           "ef_decompress"]
+           "ef_decompress", "ef_scale"]

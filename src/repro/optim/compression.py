@@ -9,9 +9,18 @@ gradient unbiased.
 
 Usage inside a shard_map'd train step (see repro/train/steps.py):
 
-    q, scale, res = ef_compress(g, res)          # int8 + per-tensor scale
-    q = jax.lax.psum(q.astype(jnp.int16), "pod") # 2 pods: |sum| <= 254
-    g = ef_decompress(q, jax.lax.psum(scale, "pod") / n_pods) / n_pods
+    scale = ef_scale(g, res)                        # per-tensor fp32 scalars
+    scale = jax.tree.map(lambda s: jax.lax.pmax(s, "pod"), scale)
+    q, scale, res = ef_compress(g, res, scale=scale)
+    q = jax.lax.psum(q.astype(jnp.int16), "pod")   # 2 pods: |sum| <= 254
+    g = ef_decompress(q, scale) / n_pods
+
+Sharing the quantization scale across the reducing axis (the pmax — one
+scalar collective per tensor) matters: if each pod quantizes with its own
+scale but the sum is dequantized with an averaged one, the mismatch never
+enters the residual and the long-run mean stays biased.  With a shared
+scale every pod's dequantization is exact w.r.t. what it sent, so the
+error-feedback guarantee holds across the link.
 
 The wire payload is the int8/int16 tensor — 2-4x smaller than the bf16
 all-reduce it replaces; §Perf quantifies the collective-term saving.
@@ -22,7 +31,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ef_init", "ef_compress", "ef_decompress"]
+__all__ = ["ef_init", "ef_scale", "ef_compress", "ef_decompress"]
 
 _QMAX = 127.0
 
@@ -33,17 +42,37 @@ def ef_init(grads):
         lambda g: jnp.zeros(g.shape, jnp.float32), grads)
 
 
-def _compress_one(g: jax.Array, res: jax.Array):
+def ef_scale(grads, residuals):
+    """Per-tensor quantization scales for the feedback-corrected gradient.
+
+    Callers reducing across an axis should pmax these before passing them
+    back via ``ef_compress(..., scale=)`` so all participants quantize and
+    dequantize on the same grid."""
+    return jax.tree_util.tree_map(
+        lambda g, r: jnp.maximum(
+            jnp.max(jnp.abs(g.astype(jnp.float32) + r)), 1e-20) / _QMAX,
+        grads, residuals)
+
+
+def _compress_one(g: jax.Array, res: jax.Array, scale: jax.Array | None):
     x = g.astype(jnp.float32) + res
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / _QMAX
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / _QMAX
     q = jnp.clip(jnp.round(x / scale), -_QMAX, _QMAX).astype(jnp.int8)
     new_res = x - q.astype(jnp.float32) * scale
     return q, scale, new_res
 
 
-def ef_compress(grads, residuals):
-    """tree of grads -> (int8 tree, scale tree, new residual tree)."""
-    flat = jax.tree_util.tree_map(_compress_one, grads, residuals)
+def ef_compress(grads, residuals, scale=None):
+    """tree of grads -> (int8 tree, scale tree, new residual tree).
+
+    ``scale``: optional externally-agreed scale tree (e.g. pmax'd across
+    the reducing axis); defaults to the local per-tensor scale."""
+    if scale is None:
+        flat = jax.tree_util.tree_map(
+            lambda g, r: _compress_one(g, r, None), grads, residuals)
+    else:
+        flat = jax.tree_util.tree_map(_compress_one, grads, residuals, scale)
     pick = lambda i: jax.tree_util.tree_map(
         lambda t: t[i], flat, is_leaf=lambda t: isinstance(t, tuple))
     return pick(0), pick(1), pick(2)

@@ -1,0 +1,78 @@
+"""Conversion-aware offload runtime: execute hybrid host/optical plans.
+
+The seed repo *priced* the paper's conversion bottleneck (``repro.core``
+returns an ``OffloadPlan`` nothing consumed); this package is the layer
+that runs it.  Module map:
+
+  backends   — registry of three interchangeable executors per op category:
+               ``host`` (pure JAX fft/conv/matmul), ``optical-sim`` (fused
+               Pallas DFT pipeline + 4f physics sim with the DAC/ADC
+               boundary applied, every batch priced with a ``StepCost``),
+               ``ideal`` (exact values at the zero-conversion analog bound).
+  executor   — ``OffloadExecutor``: request queue that coalesces same-shape
+               calls into one invocation (amortizing per-call handshake
+               latency, SLM settle/exposure, and converter-lane ceil residue
+               — the paper's §6 batching lever) and caches DFT factor
+               matrices / Fourier masks / compiled kernels per shape.
+  telemetry  — ``RuntimeTelemetry``: measured per-category call counts,
+               sample counts, and wall time, emitted as ``CategoryProfile``s
+               so ``plan_offload`` re-plans from observed traffic.
+  fidelity   — ``FidelityChecker``: shadows optical-sim batches with the
+               host reference and scores quantization error against the
+               converters' ENOB budget, pairing speedups with accuracy.
+  router     — ``PlanRouter``: applies an ``OffloadPlan``'s decisions as a
+               category->backend routing table and closes the
+               profile -> plan -> execute -> re-profile loop via ``replan``.
+  specs      — shared demo design points (``BATCHED_4F``: upgraded
+               peripherals + frame latency that only batching amortizes).
+
+Quick start::
+
+    from repro.runtime import OffloadExecutor, PlanRouter
+    ex = OffloadExecutor(PROTOTYPE_4F, max_batch=16)
+    router = PlanRouter(ex)                   # all-host profiling mode
+    ex.telemetry.start()
+    outs = [router.run("fft", img) for img in imgs]
+    ex.telemetry.stop()
+    plan = router.replan()                    # measured plan; routes updated
+"""
+
+from repro.runtime.backends import (
+    CATEGORIES,
+    BackendContext,
+    ExecutionBackend,
+    HostBackend,
+    IdealBackend,
+    OpticalSimBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.runtime.executor import OffloadExecutor, OffloadResult
+from repro.runtime.fidelity import FidelityChecker, FidelityReport, enob_error_bound
+from repro.runtime.router import PlanRouter
+from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
+from repro.runtime.telemetry import BackendStats, RuntimeTelemetry
+
+__all__ = [
+    "CATEGORIES",
+    "BackendContext",
+    "ExecutionBackend",
+    "HostBackend",
+    "IdealBackend",
+    "OpticalSimBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "OffloadExecutor",
+    "OffloadResult",
+    "FidelityChecker",
+    "FidelityReport",
+    "enob_error_bound",
+    "PlanRouter",
+    "BackendStats",
+    "RuntimeTelemetry",
+    "BATCHED_4F",
+    "CAMERA_ADC",
+    "SLM_DAC",
+]

@@ -1,0 +1,301 @@
+"""Backend registry: three interchangeable executors per op category.
+
+Every backend implements the same three op categories the planner knows
+about (``fft``, ``conv``, ``matmul``) with identical call signatures, so
+the executor can swap them per the routing table without touching callers:
+
+  ``host``        pure digital JAX (fft2 / circular conv / matmul) — the
+                  baseline the planner's ``host_s`` measures.
+  ``optical-sim`` the simulated analog engine with the conversion boundary
+                  applied: the fused Pallas DFT pipeline (DAC quantization
+                  folded into stage 1, square-law detector into stage 2)
+                  plus the auto-ranged ADC read path for ``fft``; the 4f
+                  physics simulator for ``conv``; DAC->MVM->ADC for
+                  ``matmul``.  Returns a modeled :class:`StepCost` built
+                  from the executor's accelerator spec so every result is
+                  priced, not just produced.
+  ``ideal``       the zero-conversion-cost analog bound (paper Table 1):
+                  exact digital values, cost = analog physics only.
+
+Op semantics (fixed across backends so results are comparable):
+
+  fft(a)        -> detector intensity |F a|^2 of the unitary 2-D DFT,
+                   a real, values in [0, 1] (the camera cannot see phase;
+                   a single capture yields intensity — paper App. A.1).
+  conv(a, k)    -> circular 2-D convolution (4-step interferometric capture
+                   + host-side inverse transform, paper Eq. 1).
+  matmul(a, w)  -> a @ w with activations streamed through the converters
+                   (weights held in the optical domain, amortized).
+
+Backends execute batch items one by one through per-shape jit caches:
+batching in this runtime amortizes *boundary* costs (one invocation, one
+frame, one handshake — see ``batched_step_cost``), and per-item execution
+keeps results bit-identical whether or not calls were coalesced.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import hashlib
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import (
+    OpticalFourierAcceleratorSpec,
+    OpticalMVMAcceleratorSpec,
+    StepCost,
+)
+from repro.core.optical import (
+    OpticalSimParams,
+    adc_quantize,
+    dac_quantize,
+    fourier_mask_for_kernel,
+    optical_conv2d,
+)
+from repro.kernels.optical_dft import dft_matrix_factors, dft_stage1, dft_stage2
+
+__all__ = [
+    "CATEGORIES",
+    "BackendContext",
+    "ExecutionBackend",
+    "HostBackend",
+    "OpticalSimBackend",
+    "IdealBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+CATEGORIES = ("fft", "conv", "matmul")
+
+# Interferometric complex recovery (needed by conv) costs 4 captures.
+_CONV_CAPTURES = 4
+
+
+@dataclasses.dataclass
+class BackendContext:
+    """Per-executor state shared with backends: the accelerator spec plus
+    the shape-keyed caches (DFT factor matrices, Fourier-plane masks).
+    Compiled kernels are cached by jit itself, keyed on the same shapes."""
+
+    spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec
+    factor_cache: dict[int, tuple[jax.Array, jax.Array]] = \
+        dataclasses.field(default_factory=dict)
+    mask_cache: dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def factors(self, n: int) -> tuple[jax.Array, jax.Array]:
+        if n not in self.factor_cache:
+            self.factor_cache[n] = dft_matrix_factors(n)
+        return self.factor_cache[n]
+
+    def mask(self, kernel: jax.Array) -> jax.Array:
+        # Content-keyed (not id-keyed): object identity can be recycled by
+        # the allocator after a temporary kernel dies, which would serve a
+        # stale mask.  Kernels are small; one host hash per flush group.
+        arr = np.asarray(kernel)
+        key = (arr.shape, str(arr.dtype),
+               hashlib.sha1(arr.tobytes()).hexdigest())
+        if key not in self.mask_cache:
+            self.mask_cache[key] = fourier_mask_for_kernel(kernel)
+        return self.mask_cache[key]
+
+    @property
+    def sim_params(self) -> OpticalSimParams:
+        return OpticalSimParams(dac_bits=self.spec.dac.bits,
+                                adc_bits=self.spec.adc.bits)
+
+
+class ExecutionBackend(abc.ABC):
+    """One way of executing the planner's op categories."""
+
+    name: str = "?"
+
+    def supports(self, category: str, ctx: BackendContext) -> bool:
+        if category not in CATEGORIES:
+            return False
+        if category == "matmul":
+            return isinstance(ctx.spec, OpticalMVMAcceleratorSpec) \
+                or self.name == "host"
+        return isinstance(ctx.spec, OpticalFourierAcceleratorSpec) \
+            or self.name == "host"
+
+    @abc.abstractmethod
+    def run(self, category: str, xs: Sequence[jax.Array], ctx: BackendContext,
+            *, kernel: jax.Array | None = None,
+            weights: jax.Array | None = None,
+            ) -> tuple[list[jax.Array], StepCost | None]:
+        """Execute a batch of same-shape requests.
+
+        Returns per-item results and the modeled cost of the whole batch
+        (None for backends whose cost is just their measured wall time)."""
+
+
+def _samples(x: jax.Array) -> int:
+    return int(x.size)
+
+
+# --- host: the digital baseline ----------------------------------------------
+
+
+@jax.jit
+def _host_fft_intensity(a: jax.Array) -> jax.Array:
+    return jnp.abs(jnp.fft.fft2(a, norm="ortho")) ** 2
+
+
+@jax.jit
+def _host_circular_conv(a: jax.Array, k: jax.Array) -> jax.Array:
+    return jnp.real(jnp.fft.ifft2(jnp.fft.fft2(a) * jnp.fft.fft2(k)))
+
+
+@jax.jit
+def _host_matmul(a: jax.Array, w: jax.Array) -> jax.Array:
+    return a @ w
+
+
+class HostBackend(ExecutionBackend):
+    """Pure JAX execution; cost is whatever wall time the executor measures."""
+
+    name = "host"
+
+    def run(self, category, xs, ctx, *, kernel=None, weights=None):
+        if category == "fft":
+            outs = [_host_fft_intensity(x) for x in xs]
+        elif category == "conv":
+            outs = [_host_circular_conv(x, kernel) for x in xs]
+        elif category == "matmul":
+            outs = [_host_matmul(x, weights) for x in xs]
+        else:
+            raise ValueError(f"unknown category {category!r}")
+        return outs, None
+
+
+# --- optical-sim: the conversion boundary, executed and priced ----------------
+
+
+class OpticalSimBackend(ExecutionBackend):
+    """Simulated analog engine with DAC/ADC quantization applied.
+
+    ``fft`` runs the fused Pallas pipeline (``dft_stage1``/``dft_stage2``
+    with cached factor matrices) then the auto-ranged ADC pass; ``conv``
+    runs the 4f physics simulator; ``matmul`` streams activations through
+    the converter models around a digital matmul standing in for the MVM
+    core.  Every batch returns a :class:`StepCost` from the spec's
+    ``batched_step_cost`` so callers always see the boundary price.
+    """
+
+    name = "optical-sim"
+
+    def _fft_one(self, a: jax.Array, ctx: BackendContext) -> jax.Array:
+        h, w = a.shape
+        whr, whi = ctx.factors(h)
+        wwr, wwi = ctx.factors(w)
+        tr, ti = dft_stage1(whr, whi, a, dac_bits=ctx.spec.dac.bits)
+        intensity = dft_stage2(tr, ti, wwr, wwi)
+        return adc_quantize(intensity, ctx.spec.adc.bits)
+
+    def _conv_one(self, a: jax.Array, kernel: jax.Array,
+                  ctx: BackendContext) -> jax.Array:
+        mask = ctx.mask(kernel)
+        # The DAC's full-scale range is fixed [0, 1] and the SLM cannot
+        # encode negative amplitudes, so the host affine-maps the input
+        # onto the aperture and undoes the map after: conv is linear, and
+        # conv(s*v + lo) = s*conv(v) + lo*sum(kernel) (circular conv of a
+        # constant plane is the kernel sum).
+        lo = jnp.min(a)
+        scale = jnp.maximum(jnp.max(a) - lo, 1e-9)
+        v = (a - lo) / scale
+        out = optical_conv2d(v, mask, ctx.sim_params, None)
+        return out * scale + lo * jnp.sum(kernel)
+
+    def _matmul_one(self, a: jax.Array, w: jax.Array,
+                    ctx: BackendContext) -> jax.Array:
+        scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-9)
+        q = dac_quantize(0.5 * (a / scale + 1.0), ctx.spec.dac.bits) * 2.0 - 1.0
+        y = (q * scale) @ w
+        pos = jnp.maximum(y, 0.0)
+        neg = jnp.maximum(-y, 0.0)  # differential readout: two ADC ranges
+        return (adc_quantize(pos, ctx.spec.adc.bits)
+                - adc_quantize(neg, ctx.spec.adc.bits))
+
+    def run(self, category, xs, ctx, *, kernel=None, weights=None):
+        batch = len(xs)
+        n_in = _samples(xs[0])
+        if category == "fft":
+            outs = [self._fft_one(x, ctx) for x in xs]
+            cost = ctx.spec.batched_step_cost(n_in, _samples(outs[0]),
+                                              batch=batch)
+        elif category == "conv":
+            outs = [self._conv_one(x, kernel, ctx) for x in xs]
+            spec4 = dataclasses.replace(ctx.spec,
+                                        phase_shift_captures=_CONV_CAPTURES)
+            cost = spec4.batched_step_cost(n_in, _samples(outs[0]),
+                                           batch=batch)
+        elif category == "matmul":
+            outs = [self._matmul_one(x, weights, ctx) for x in xs]
+            m, k = xs[0].shape
+            n = weights.shape[-1]
+            # Batching stacks activations along m: one streamed invocation.
+            cost = dataclasses.replace(
+                ctx.spec.matmul_cost(batch * m, k, n),
+                interface_s=ctx.spec.interface_latency_s)
+        else:
+            raise ValueError(f"unknown category {category!r}")
+        return outs, cost
+
+
+# --- ideal: the zero-conversion-cost analog bound -----------------------------
+
+
+class IdealBackend(ExecutionBackend):
+    """Exact digital values, priced as if conversion and interface were free.
+
+    This is the paper's Table-1 'ideal accelerator' column made executable:
+    the only cost charged is the analog physics itself, so comparing a plan
+    under ``ideal`` against ``optical-sim`` isolates exactly what the
+    boundary costs.
+    """
+
+    name = "ideal"
+
+    def run(self, category, xs, ctx, *, kernel=None, weights=None):
+        outs, _ = _HOST.run(category, xs, ctx, kernel=kernel, weights=weights)
+        spec = ctx.spec
+        if isinstance(spec, OpticalMVMAcceleratorSpec):
+            analog = len(xs) * spec.optical_pass_s
+        else:
+            caps = _CONV_CAPTURES if category == "conv" \
+                else spec.phase_shift_captures
+            analog = ((spec.slm_settle_s + spec.exposure_s) * caps
+                      + spec.time_of_flight_s())
+        return outs, StepCost(0.0, 0.0, 0.0, analog_s=analog)
+
+
+_HOST = HostBackend()
+
+_REGISTRY: dict[str, Callable[[], ExecutionBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], ExecutionBackend]) -> None:
+    """Register (or override) a backend under ``name``."""
+    _REGISTRY[name] = factory
+
+
+def get_backend(name: str) -> ExecutionBackend:
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; "
+                       f"available: {available_backends()}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_backend("host", HostBackend)
+register_backend("optical-sim", OpticalSimBackend)
+register_backend("ideal", IdealBackend)

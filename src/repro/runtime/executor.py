@@ -1,0 +1,238 @@
+"""The offload executor: turns ``OffloadPlan`` decisions into execution.
+
+Callers ``submit`` accelerable ops (fft / conv / matmul) and the executor
+coalesces queued calls of the same shape into one accelerator invocation at
+``flush`` time.  That is the paper's §6 batching lever made operational:
+per-invocation boundary costs (link handshake latency, SLM settle/exposure,
+converter-lane ceil residue) amortize across the batch, so the modeled
+per-call conversion + interface time *drops* as the queue deepens, while
+results stay bit-identical to unbatched execution (items run one by one
+through per-shape jit caches; only the boundary accounting is shared).
+
+Execution is recorded into :class:`RuntimeTelemetry` — call counts, sample
+counts, wall time, modeled cost — so ``telemetry.profiles()`` can re-enter
+``plan_offload`` and the plan can be re-derived from observed traffic.
+Optionally every optical-sim batch is shadowed by the host backend and
+scored by a :class:`FidelityChecker`, pairing each speedup with its
+quantization-error cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+from repro.core.accelerator import (
+    PROTOTYPE_4F,
+    OpticalFourierAcceleratorSpec,
+    OpticalMVMAcceleratorSpec,
+    StepCost,
+)
+from repro.runtime.backends import (
+    BackendContext,
+    ExecutionBackend,
+    get_backend,
+)
+from repro.runtime.fidelity import FidelityChecker, FidelityReport
+from repro.runtime.telemetry import RuntimeTelemetry
+
+__all__ = ["OffloadResult", "OffloadExecutor"]
+
+
+def _block(x: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+class OffloadResult:
+    """Handle for a submitted call; materializes at ``flush``.
+
+    Attributes (valid once ``ready``):
+      value: the op result.
+      cost: modeled per-call share of the invocation's :class:`StepCost`.
+      backend: backend name that served the call.
+      batch: how many calls shared the invocation.
+      fidelity: the batch's :class:`FidelityReport` (when checking is on).
+    """
+
+    def __init__(self, executor: "OffloadExecutor") -> None:
+        self._executor = executor
+        self.ready = False
+        self.value: jax.Array | None = None
+        self.cost: StepCost | None = None
+        self.backend: str | None = None
+        self.batch: int = 0
+        self.fidelity: FidelityReport | None = None
+
+    def get(self) -> jax.Array:
+        if not self.ready:
+            self._executor.flush()
+        return self.value
+
+    def _fill(self, value: jax.Array, cost: StepCost, backend: str,
+              batch: int, fidelity: FidelityReport | None) -> None:
+        self.value = value
+        self.cost = cost
+        self.backend = backend
+        self.batch = batch
+        self.fidelity = fidelity
+        self.ready = True
+
+
+@dataclasses.dataclass
+class _Pending:
+    category: str
+    x: jax.Array
+    kernel: jax.Array | None
+    weights: jax.Array | None
+    backend: str
+    result: OffloadResult
+
+    def group_key(self) -> tuple:
+        return (self.category, self.backend, tuple(self.x.shape),
+                str(self.x.dtype), id(self.kernel), id(self.weights))
+
+
+class OffloadExecutor:
+    """Queue + batcher + cache in front of the backend registry.
+
+    Args:
+      spec: accelerator priced/simulated by the analog backends.
+      default_backend: where submits go when the caller (or router) does
+        not name one.
+      telemetry: shared :class:`RuntimeTelemetry` (created if omitted).
+      fidelity: optional :class:`FidelityChecker`; when set, optical-sim
+        batches are shadowed by the host backend and scored (validation
+        mode — the shadow run is excluded from telemetry).
+      max_batch: largest number of calls coalesced into one invocation.
+    """
+
+    def __init__(self,
+                 spec: OpticalFourierAcceleratorSpec |
+                       OpticalMVMAcceleratorSpec = PROTOTYPE_4F,
+                 *,
+                 default_backend: str = "optical-sim",
+                 telemetry: RuntimeTelemetry | None = None,
+                 fidelity: FidelityChecker | None = None,
+                 max_batch: int = 32) -> None:
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.ctx = BackendContext(spec=spec)
+        self.default_backend = default_backend
+        self.telemetry = telemetry or RuntimeTelemetry()
+        self.fidelity = fidelity
+        self.max_batch = max_batch
+        self._queue: list[_Pending] = []
+        self._backends: dict[str, ExecutionBackend] = {}
+
+    @property
+    def spec(self):
+        return self.ctx.spec
+
+    def _backend(self, name: str) -> ExecutionBackend:
+        if name not in self._backends:
+            self._backends[name] = get_backend(name)
+        return self._backends[name]
+
+    def _validate(self, category: str, backend: str | None,
+                  kernel: jax.Array | None,
+                  weights: jax.Array | None) -> str:
+        name = backend or self.default_backend
+        be = self._backend(name)
+        if not be.supports(category, self.ctx):
+            raise ValueError(
+                f"backend {name!r} does not support category {category!r} "
+                f"on spec {self.ctx.spec.name!r}")
+        if category == "conv" and kernel is None:
+            raise ValueError("conv requires kernel=")
+        if category == "matmul" and weights is None:
+            raise ValueError("matmul requires weights=")
+        return name
+
+    # -- client API ------------------------------------------------------------
+    def submit(self, category: str, x: jax.Array, *,
+               kernel: jax.Array | None = None,
+               weights: jax.Array | None = None,
+               backend: str | None = None) -> OffloadResult:
+        """Queue one call; returns a handle materialized at ``flush``."""
+        name = self._validate(category, backend, kernel, weights)
+        result = OffloadResult(self)
+        self._queue.append(_Pending(category, x, kernel, weights, name, result))
+        return result
+
+    def run(self, category: str, x: jax.Array, **kwargs) -> jax.Array:
+        """Convenience: submit one call and flush immediately."""
+        return self.submit(category, x, **kwargs).get()
+
+    def warm(self, category: str, x: jax.Array, *,
+             kernel: jax.Array | None = None,
+             weights: jax.Array | None = None,
+             backend: str | None = None) -> None:
+        """Execute once without recording: primes the per-shape jit/factor
+        caches so first-call compilation time does not pollute measured
+        profiles (call before ``telemetry.start()``)."""
+        name = self._validate(category, backend, kernel, weights)
+        outs, _ = self._backend(name).run(category, [x], self.ctx,
+                                          kernel=kernel, weights=weights)
+        _block(outs)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- the batcher -----------------------------------------------------------
+    def flush(self) -> list[OffloadResult]:
+        """Execute everything queued, coalescing same-shape calls.
+
+        Requests group on (category, backend, shape, dtype, operand
+        identity); each group dispatches as ceil(K / max_batch) batched
+        invocations, preserving submission order within a group.
+        """
+        queue, self._queue = self._queue, []
+        groups: dict[tuple, list[_Pending]] = {}
+        for p in queue:
+            groups.setdefault(p.group_key(), []).append(p)
+        done: list[OffloadResult] = []
+        for members in groups.values():
+            for i in range(0, len(members), self.max_batch):
+                chunk = members[i:i + self.max_batch]
+                self._dispatch(chunk)
+                done.extend(p.result for p in chunk)
+        return done
+
+    def _dispatch(self, chunk: list[_Pending]) -> None:
+        head = chunk[0]
+        be = self._backend(head.backend)
+        xs = [p.x for p in chunk]
+        t0 = time.perf_counter()
+        outs, modeled = be.run(head.category, xs, self.ctx,
+                               kernel=head.kernel, weights=head.weights)
+        _block(outs)
+        wall = time.perf_counter() - t0
+        batch = len(chunk)
+        samples_in = sum(int(p.x.size) for p in chunk)
+        samples_out = sum(int(o.size) for o in outs)
+        self.telemetry.record(
+            head.category, be.name, calls=batch, samples_in=samples_in,
+            samples_out=samples_out, wall_s=wall, modeled=modeled)
+        report = None
+        if self.fidelity is not None and be.name == "optical-sim":
+            t1 = time.perf_counter()
+            refs, _ = self._backend("host").run(
+                head.category, xs, self.ctx,
+                kernel=head.kernel, weights=head.weights)
+            _block(refs)
+            spec = self.ctx.spec
+            enob = min(spec.dac.effective_bits, spec.adc.effective_bits)
+            report = self.fidelity.check(head.category, be.name, outs, refs,
+                                         enob=enob)
+            # validation overhead, not workload: keep it out of 'other'
+            self.telemetry.discount_window(time.perf_counter() - t1)
+        share = modeled.scaled(1.0 / batch) if modeled is not None \
+            else StepCost(0.0, 0.0, 0.0, 0.0, host_s=wall / batch)
+        for p, out in zip(chunk, outs):
+            p.result._fill(out, share, be.name, batch, report)

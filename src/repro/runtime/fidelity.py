@@ -1,0 +1,103 @@
+"""Fidelity checking: pair every offloaded result with its accuracy cost.
+
+The paper's argument cuts both ways: conversion costs time, and *skimping*
+on conversion costs accuracy (fewer DAC/ADC bits -> cheaper boundary ->
+worse results).  A speedup claim for the analog engine is only meaningful
+next to the quantization error it introduces, so the runtime can shadow
+every optical-sim batch with the host reference and report the relative
+error against the bound implied by the converters' ENOB.
+
+The bound: a b-bit uniform quantizer on a full-scale signal contributes
+RMS error ~ q / sqrt(12) with q = 1 / (2^b - 1), i.e. a relative L2 error
+on the order of 2^-b.  The optical pipeline squares the field at the
+detector (intensity doubles relative error) and auto-ranges the ADC, so we
+allow a configurable slack factor over the ideal-quantizer floor; what the
+checker *guarantees* is the paper-relevant direction: error decreases as
+converter resolution increases, and a result that blows through the bound
+flags a broken offload rather than silently serving garbage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FidelityReport", "FidelityChecker", "enob_error_bound"]
+
+
+def enob_error_bound(enob: float, slack: float = 16.0) -> float:
+    """Relative-error budget implied by ``enob`` effective bits."""
+    if enob <= 0:
+        return math.inf
+    return slack * 2.0 ** (-enob)
+
+
+@dataclasses.dataclass(frozen=True)
+class FidelityReport:
+    category: str
+    backend: str
+    batch: int
+    rel_err: float          # max over the batch of ||got-ref|| / ||ref||
+    enob: float             # limiting converter ENOB used for the bound
+    bound: float
+
+    @property
+    def ok(self) -> bool:
+        return self.rel_err <= self.bound
+
+    def __str__(self) -> str:
+        flag = "ok" if self.ok else "VIOLATION"
+        return (f"fidelity[{self.category}/{self.backend} x{self.batch}] "
+                f"rel_err={self.rel_err:.3e} bound={self.bound:.3e} "
+                f"(enob={self.enob:.1f}) {flag}")
+
+
+def _rel_err(got: jax.Array, ref: jax.Array) -> float:
+    got = jnp.asarray(got, jnp.float32)
+    ref = jnp.asarray(ref, jnp.float32)
+    denom = jnp.maximum(jnp.linalg.norm(ref.reshape(-1)), 1e-12)
+    return float(jnp.linalg.norm((got - ref).reshape(-1)) / denom)
+
+
+class FidelityChecker:
+    """Accumulates per-batch quantization-error reports.
+
+    ``slack`` widens the ideal-quantizer floor to cover detector squaring,
+    ADC auto-ranging, and error accumulation across the DFT; tune it down
+    to make the checker stricter.
+    """
+
+    def __init__(self, slack: float = 16.0) -> None:
+        self.slack = slack
+        self.reports: list[FidelityReport] = []
+
+    def check(self, category: str, backend: str, got: list[jax.Array],
+              ref: list[jax.Array], *, enob: float) -> FidelityReport:
+        rel = max(_rel_err(g, r) for g, r in zip(got, ref))
+        report = FidelityReport(category=category, backend=backend,
+                                batch=len(got), rel_err=rel, enob=enob,
+                                bound=enob_error_bound(enob, self.slack))
+        self.reports.append(report)
+        return report
+
+    # -- rollups ---------------------------------------------------------------
+    def worst(self, category: str | None = None) -> FidelityReport | None:
+        pool = [r for r in self.reports
+                if category is None or r.category == category]
+        return max(pool, key=lambda r: r.rel_err) if pool else None
+
+    @property
+    def all_ok(self) -> bool:
+        return all(r.ok for r in self.reports)
+
+    def summary(self) -> str:
+        if not self.reports:
+            return "fidelity: no checks recorded"
+        lines = [str(r) for r in self.reports[-8:]]
+        w = self.worst()
+        lines.append(f"fidelity worst: {w.category} rel_err={w.rel_err:.3e} "
+                     f"({'within' if self.all_ok else 'OUTSIDE'} ENOB budget)")
+        return "\n".join(lines)

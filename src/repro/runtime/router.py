@@ -1,0 +1,118 @@
+"""Plan-driven routing: consume an ``OffloadPlan``, don't just print it.
+
+``PlanRouter`` is the piece that finally *uses* the planner's output: each
+category the plan marked ``offload=True`` routes to the analog backend,
+everything else stays on the host.  Because the executor records telemetry
+as traffic flows, the router can then re-plan from *measured* profiles —
+the closed loop the paper's methodology implies:
+
+    router = PlanRouter(executor)          # starts all-host (profiling mode)
+    ... serve traffic via router.run(...) ...
+    plan = router.replan()                 # plan from observed workload
+    ... keep serving; offload-worthy categories now hit the analog engine ...
+
+``replan`` prices the observed profiles on the executor's spec with
+``plan_offload`` and atomically swaps the routing table to match the new
+plan's decisions.
+"""
+
+from __future__ import annotations
+
+from repro.core.planner import CategoryProfile, OffloadPlan, plan_offload
+from repro.runtime.backends import CATEGORIES
+from repro.runtime.executor import OffloadExecutor, OffloadResult
+
+__all__ = ["PlanRouter"]
+
+
+class PlanRouter:
+    """Routes op categories to backends according to an ``OffloadPlan``."""
+
+    def __init__(self, executor: OffloadExecutor, plan: OffloadPlan | None = None,
+                 *, offload_backend: str = "optical-sim",
+                 host_backend: str = "host") -> None:
+        self.executor = executor
+        self.offload_backend = offload_backend
+        self.host_backend = host_backend
+        self.routes: dict[str, str] = {c: host_backend for c in CATEGORIES}
+        self.plan: OffloadPlan | None = None
+        if plan is not None:
+            self.apply(plan)
+
+    @classmethod
+    def from_plan(cls, executor: OffloadExecutor, plan: OffloadPlan,
+                  **kwargs) -> "PlanRouter":
+        return cls(executor, plan, **kwargs)
+
+    # -- routing table ---------------------------------------------------------
+    def apply(self, plan: OffloadPlan) -> None:
+        """Swap the routing table to match ``plan``'s offload decisions."""
+        routes = {c: self.host_backend for c in CATEGORIES}
+        for d in plan.decisions:
+            if d.category in routes and d.offload:
+                routes[d.category] = self.offload_backend
+        self.routes = routes
+        self.plan = plan
+
+    def backend_for(self, category: str) -> str:
+        return self.routes.get(category, self.host_backend)
+
+    def offloaded_categories(self) -> tuple[str, ...]:
+        return tuple(c for c, b in self.routes.items()
+                     if b != self.host_backend)
+
+    # -- execution (delegates to the executor with the routed backend) ---------
+    def submit(self, category: str, x, **kwargs) -> OffloadResult:
+        kwargs.setdefault("backend", self.backend_for(category))
+        return self.executor.submit(category, x, **kwargs)
+
+    def run(self, category: str, x, **kwargs):
+        return self.submit(category, x, **kwargs).get()
+
+    def flush(self) -> list[OffloadResult]:
+        return self.executor.flush()
+
+    @property
+    def pending(self) -> int:
+        return self.executor.pending
+
+    # -- the loop-closer -------------------------------------------------------
+    def replan(self, spec=None,
+               extra_profiles: tuple[CategoryProfile, ...] = (),
+               apply: bool = True, max_batch: int | None = None) -> OffloadPlan:
+        """Re-derive the plan from the executor's measured telemetry.
+
+        By default pricing batches at the *observed* queue occupancy
+        (capped by the executor's ``max_batch``): traffic that arrived one
+        call per flush gets no handshake amortization credit, traffic that
+        arrived in deep groups does — so the plan's verdict matches how
+        this runtime actually executed.  Pass ``max_batch=1`` for the
+        paper's serial model, or an explicit value to price a hypothetical
+        batching depth.  ``extra_profiles`` lets callers append workload
+        the runtime never saw (e.g. a known non-offloadable phase);
+        ``apply=False`` prices without touching the routing table.
+        """
+        telemetry = self.executor.telemetry
+        profiles = list(telemetry.profiles())
+        profiles.extend(extra_profiles)
+        if max_batch is None:
+            # per-category: one category's deep batches must not credit
+            # another category's serial traffic with amortization
+            batch: int | dict[str, int] = {
+                cat: min(self.executor.max_batch,
+                         telemetry.observed_occupancy(cat))
+                for cat in telemetry.categories()}
+        else:
+            batch = max_batch
+        plan = plan_offload(profiles, spec or self.executor.spec,
+                            max_batch=batch)
+        if apply:
+            self.apply(plan)
+        return plan
+
+    def summary(self) -> str:
+        rows = ["router: " + ", ".join(
+            f"{c}->{b}" for c, b in sorted(self.routes.items()))]
+        if self.plan is not None:
+            rows.append(self.plan.summary())
+        return "\n".join(rows)

@@ -1,0 +1,43 @@
+"""Shared demo/benchmark accelerator design points for the runtime.
+
+``BATCHED_4F`` is the batched 4f variant used by
+``examples/optical_offload.py`` and ``benchmarks/runtime_bench.py``: the
+prototype's architecture with upgraded peripherals — a 2048x2048
+ferroelectric SLM, PCIe/CoaXPress-class pixel links, column-parallel
+camera-class converters (higher resolution at lower rate, still
+frontier-plausible) — but the 60 Hz display-class *frame-sync latency*
+retained: a liquid-crystal SLM refreshes per frame no matter how fast the
+data link is.  That per-invocation latency is the paper's §6 overhead, and
+it amortizes exactly when the runtime packs many inputs into one aperture
+frame (the batching executor's job).
+
+The interferometric conv path genuinely needs the extra ADC bits: with
+the paper's 6 b/8 b frontier converters the fidelity checker flags conv
+results as outside the ENOB budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accelerator import PROTOTYPE_4F, OpticalFourierAcceleratorSpec
+from repro.core.conversion import ConverterSpec
+
+__all__ = ["SLM_DAC", "CAMERA_ADC", "BATCHED_4F"]
+
+SLM_DAC = ConverterSpec(name="slm-dac", kind="dac", bits=8, rate_hz=1.0e9,
+                        power_w=0.050, enob=7.0)
+
+# 14 b column-parallel scientific-camera class readout.  The auto-ranged
+# ADC digitizes a DC-dominated Fourier-plane intensity, so effective
+# resolution for off-DC content is what the extra bits buy.  Walden FoM
+# 29 fJ/c-s at 500 MS/s — above the survey envelope (~5 fJ), realizable.
+CAMERA_ADC = ConverterSpec(name="camera-adc", kind="adc", bits=14,
+                           rate_hz=5.0e8, power_w=0.060, enob=12.0)
+
+BATCHED_4F: OpticalFourierAcceleratorSpec = dataclasses.replace(
+    PROTOTYPE_4F, name="batched-4f", slm_pixels=(2048, 2048),
+    interface_latency_s=16.7e-3,
+    dac=SLM_DAC, adc=CAMERA_ADC, dac_lanes=48, adc_lanes=48,
+    slm_interface_hz=1.0e9, camera_interface_hz=1.0e9,
+    slm_settle_s=1.0e-4, exposure_s=5.0e-5)

@@ -1,0 +1,209 @@
+"""Execution telemetry: measured per-category traffic -> ``CategoryProfile``s.
+
+The planner (``repro.core.planner``) prices offload from a workload profile.
+The seed repo fed it *hand-written* profiles (or ``OpProfiler`` brackets the
+caller had to place manually).  The runtime records the same quantities as a
+side effect of executing requests — call counts, boundary sample counts,
+wall time — keyed by ``(category, backend)``, so after any traffic has
+flowed through the :class:`~repro.runtime.executor.OffloadExecutor` the
+observed workload can be handed straight back to ``plan_offload``:
+
+    telemetry.start()
+    ... route traffic through the executor ...
+    telemetry.stop()
+    plan = plan_offload(telemetry.profiles(), spec)
+
+closing the paper's profile -> plan -> execute -> re-profile loop.
+
+``host_s`` in an emitted profile prefers wall time measured on the digital
+backends (``host`` / ``ideal``) because that is the quantity the planner
+compares accelerator pricing against; a category observed only through the
+optical-sim backend falls back to its simulated wall time (flagged via
+:meth:`RuntimeTelemetry.host_timed`).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+from repro.core.accelerator import StepCost
+from repro.core.planner import CategoryProfile
+
+__all__ = ["BackendStats", "RuntimeTelemetry"]
+
+# Backends whose measured wall time is honest *host* time for planning.
+_HOST_LIKE = ("host", "ideal")
+
+
+@dataclasses.dataclass
+class BackendStats:
+    """Accumulated traffic for one (category, backend) pair."""
+
+    calls: int = 0            # logical offload requests
+    invocations: int = 0      # accelerator dispatches (batches) serving them
+    samples_in: int = 0       # scalars that crossed (or would cross) the DAC
+    samples_out: int = 0      # scalars back through the ADC
+    wall_s: float = 0.0       # measured execution wall time
+    modeled: StepCost = StepCost(0.0, 0.0, 0.0, 0.0)
+
+    def add(self, *, calls: int, samples_in: int, samples_out: int,
+            wall_s: float, modeled: StepCost | None) -> None:
+        self.calls += calls
+        self.invocations += 1
+        self.samples_in += samples_in
+        self.samples_out += samples_out
+        self.wall_s += wall_s
+        if modeled is not None:
+            self.modeled = self.modeled + modeled
+
+
+class RuntimeTelemetry:
+    """Records executor traffic and emits measured ``CategoryProfile``s."""
+
+    def __init__(self) -> None:
+        self.stats: dict[tuple[str, str], BackendStats] = \
+            collections.defaultdict(BackendStats)
+        self._t0: float | None = None
+        self._window_s: float = 0.0
+        self._in_window_s: float = 0.0  # recorded wall inside the window
+
+    # -- whole-run window (for the non-offloadable 'other' bucket) -----------
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        if self._t0 is None:
+            raise RuntimeError("telemetry window not started")
+        self._window_s += time.perf_counter() - self._t0
+        self._t0 = None
+        return self._window_s
+
+    @property
+    def window_s(self) -> float:
+        return self._window_s
+
+    # -- recording (called by the executor) ----------------------------------
+    def record(self, category: str, backend: str, *, calls: int,
+               samples_in: int, samples_out: int, wall_s: float,
+               modeled: StepCost | None = None) -> None:
+        self.stats[(category, backend)].add(
+            calls=calls, samples_in=samples_in, samples_out=samples_out,
+            wall_s=wall_s, modeled=modeled)
+        if self._t0 is not None:  # only in-window traffic offsets 'other'
+            self._in_window_s += wall_s
+
+    def discount_window(self, wall_s: float) -> None:
+        """Exclude ``wall_s`` of measurement overhead (e.g. the fidelity
+        checker's shadow reference run) from the window's 'other' bucket —
+        it elapsed inside the window but is not workload."""
+        if self._t0 is not None:
+            self._in_window_s += wall_s
+
+    # -- views ----------------------------------------------------------------
+    def categories(self) -> tuple[str, ...]:
+        seen: dict[str, None] = {}
+        for cat, _ in self.stats:
+            seen.setdefault(cat)
+        return tuple(seen)
+
+    def host_timed(self, category: str) -> bool:
+        """True when ``category`` has wall time from a host-like backend."""
+        return any(self.stats[(category, b)].wall_s > 0.0
+                   for b in _HOST_LIKE if (category, b) in self.stats)
+
+    def _category_rollup(self, category: str) -> tuple[int, int, int, float]:
+        calls = s_in = s_out = host_calls = 0
+        host_s = other_s = 0.0
+        for (cat, backend), st in self.stats.items():
+            if cat != category:
+                continue
+            calls += st.calls
+            s_in += st.samples_in
+            s_out += st.samples_out
+            if backend in _HOST_LIKE:
+                host_s += st.wall_s
+                host_calls += st.calls
+            else:
+                other_s += st.wall_s
+        if host_s > 0.0 and host_calls > 0:
+            # price ALL observed calls at the measured host rate, so a
+            # category that later ran offloaded is not under-weighted on
+            # the host side of the next replan
+            est = host_s * (calls / host_calls)
+        else:
+            est = other_s
+        return calls, s_in, s_out, est
+
+    def recorded_s(self) -> float:
+        return sum(st.wall_s for st in self.stats.values())
+
+    def observed_occupancy(self, category: str | None = None) -> int:
+        """Average calls coalesced per invocation in the observed traffic,
+        per category (or globally when ``category`` is None).
+
+        This is the amortization the workload *actually achieved* — pricing
+        a plan at a deeper batch than a category's traffic exhibits would
+        credit the accelerator with handshake amortization it never gets,
+        and one category's deep batches must not subsidize another's
+        serial calls."""
+        calls = invocations = 0
+        for (cat, _backend), st in self.stats.items():
+            if category is not None and cat != category:
+                continue
+            calls += st.calls
+            invocations += st.invocations
+        if invocations <= 0:
+            return 1
+        return max(1, round(calls / invocations))
+
+    # -- the loop-closing output ----------------------------------------------
+    def profiles(self, include_other: bool = True) -> list[CategoryProfile]:
+        """Observed traffic as planner input.
+
+        One profile per executed category, plus (when a start/stop window was
+        used) an ``other`` profile holding the non-offloadable remainder of
+        the window — exactly the shape ``plan_offload`` expects.
+        """
+        out: list[CategoryProfile] = []
+        for cat in self.categories():
+            calls, s_in, s_out, host_s = self._category_rollup(cat)
+            out.append(CategoryProfile(cat, host_s=host_s, calls=max(calls, 1),
+                                       samples_in=s_in, samples_out=s_out))
+        if include_other and self._window_s > 0.0:
+            other = max(self._window_s - self._in_window_s, 0.0)
+            out.append(CategoryProfile("other", host_s=other))
+        return out
+
+    def merge(self, other: "RuntimeTelemetry") -> None:
+        for key, st in other.stats.items():
+            mine = self.stats[key]
+            mine.calls += st.calls
+            mine.invocations += st.invocations
+            mine.samples_in += st.samples_in
+            mine.samples_out += st.samples_out
+            mine.wall_s += st.wall_s
+            mine.modeled = mine.modeled + st.modeled
+        self._window_s += other._window_s
+        self._in_window_s += other._in_window_s
+
+    def reset(self) -> None:
+        self.stats.clear()
+        self._t0 = None
+        self._window_s = 0.0
+        self._in_window_s = 0.0
+
+    def summary(self) -> str:
+        rows = ["telemetry:"]
+        for (cat, backend), st in sorted(self.stats.items()):
+            rows.append(
+                f"  {cat:>8}/{backend:<11} calls={st.calls} "
+                f"batches={st.invocations} in={st.samples_in} "
+                f"out={st.samples_out} wall={st.wall_s:.4g}s "
+                f"modeled={st.modeled.total_s:.4g}s "
+                f"(conv {st.modeled.conversion_s:.4g}s)")
+        if self._window_s:
+            rows.append(f"  window={self._window_s:.4g}s "
+                        f"recorded={self.recorded_s():.4g}s")
+        return "\n".join(rows)

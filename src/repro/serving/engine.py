@@ -10,6 +10,15 @@
 Static shapes: one compilation for prefill (per prompt length bucket) and
 one for decode.  The decode step function is exactly what the decode_32k /
 long_500k dry-run cells lower.
+
+Analog offload (opt-in): pass ``offload=`` a ``repro.runtime`` ``PlanRouter``
+(or bare ``OffloadExecutor``) and attention-adjacent FFT/conv work — e.g.
+spectral retrieval scoring or conv feature extraction riding along with
+generation — can be queued via :meth:`ServingEngine.submit_aux`.  The engine
+flushes the offload queue once per decode step, so aux calls submitted by
+different requests coalesce into batched accelerator invocations (one
+conversion-boundary crossing for the whole step, the paper's §6 lever) and
+the runtime's telemetry observes real serving traffic for re-planning.
 """
 
 from __future__ import annotations
@@ -38,7 +47,7 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, batch_slots: int = 4,
                  max_len: int = 256, eos_id: int | None = None,
-                 prompt_bucket: int = 1) -> None:
+                 prompt_bucket: int = 1, offload: Any | None = None) -> None:
         self.cfg = cfg
         self.model = LM(cfg)
         self.params = params
@@ -54,13 +63,36 @@ class ServingEngine:
         self._decode = jax.jit(self.model.decode_step)
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_len=max_len))
+        # analog-offload hook: a PlanRouter/OffloadExecutor (duck-typed on
+        # submit/flush/pending) or None; aux submissions batch across
+        # decode steps.
+        self.offload = offload
 
     # -- client API ----------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
+    def submit_aux(self, category: str, x: jax.Array, **kwargs):
+        """Queue attention-adjacent FFT/conv/matmul work on the offload
+        runtime; returns an ``OffloadResult`` handle that materializes at
+        the next decode step (or on ``handle.get()``).  Requires the engine
+        to have been constructed with ``offload=``."""
+        if self.offload is None:
+            raise RuntimeError("engine built without offload= runtime")
+        return self.offload.submit(category, x, **kwargs)
+
+    @property
+    def pending_aux(self) -> int:
+        # the runtime's queue is the single source of truth: callers may
+        # drain it directly (handle.get(), router.flush()) between steps
+        return self.offload.pending if self.offload is not None else 0
+
+    def flush_aux(self) -> list:
+        """Dispatch queued aux work as batched accelerator invocations."""
+        return self.offload.flush() if self.offload is not None else []
+
     def idle(self) -> bool:
-        return not self.queue and not self.active
+        return not self.queue and not self.active and not self.pending_aux
 
     # -- internals -------------------------------------------------------------
     def _splice_slot(self, slot: int, slot_cache: Any) -> None:
@@ -97,8 +129,11 @@ class ServingEngine:
             self.active[slot] = req
 
     def step(self) -> list[Request]:
-        """Admit waiting requests, then one batched decode step."""
+        """Admit waiting requests, flush batched aux offload work, then one
+        batched decode step."""
         self._admit()
+        if self.pending_aux:
+            self.flush_aux()
         if not self.active:
             return []
         logits, self.cache = self._decode(self.params, self.cache,

@@ -20,20 +20,23 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, json, numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
-from repro.optim import ef_compress, ef_decompress, ef_init
+from repro.optim import ef_compress, ef_decompress, ef_init, ef_scale
 
-auto = jax.sharding.AxisType.Auto
-mesh = jax.make_mesh((2, 2), ("pod", "data"), axis_types=(auto, auto))
-jax.set_mesh(mesh)
+from repro.distributed.compat import enter_mesh, make_auto_mesh
+mesh = make_auto_mesh((2, 2), ("pod", "data"))
+enter_mesh(mesh)
 N_POD = 2
 
 def compressed_pod_allreduce(g, res):
-    # per-pod shard: psum over data in bf16, then int8 over the pod link
+    # per-pod shard: psum over data in bf16, then int8 over the pod link;
+    # the quantization scale is pmax-shared across pods (one scalar
+    # collective) so dequantization is exact and error feedback unbiased
     g = jax.lax.psum(g.astype(jnp.float32), "data") / mesh.shape["data"]
-    q, scale, res_d = ef_compress({"g": g}, {"g": res})
+    scale = ef_scale({"g": g}, {"g": res})
+    scale = {"g": jax.lax.pmax(scale["g"], "pod")}
+    q, scale, res_d = ef_compress({"g": g}, {"g": res}, scale=scale)
     wire = jax.lax.psum(q["g"].astype(jnp.int16), "pod")   # |sum|<=254: int16 safe
-    scale_sum = jax.lax.psum(scale["g"], "pod")
-    out = wire.astype(jnp.float32) * (scale_sum / N_POD) / N_POD
+    out = wire.astype(jnp.float32) * scale["g"] / N_POD
     return out, res_d["g"]
 
 fn = shard_map(compressed_pod_allreduce, mesh=mesh,

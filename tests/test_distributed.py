@@ -21,9 +21,9 @@ from repro.optim import adamw
 from repro.train import make_train_step
 
 out = {}
-auto = jax.sharding.AxisType.Auto
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(auto, auto))
-jax.set_mesh(mesh)
+from repro.distributed.compat import enter_mesh, make_auto_mesh
+mesh = make_auto_mesh((2, 4), ("data", "model"))
+enter_mesh(mesh)
 
 # 1. constraint liveness (regression for the with-mesh no-op bug)
 from repro.distributed.sharding import current_axis_names
@@ -61,8 +61,8 @@ leaf = jax.tree_util.tree_leaves(params2)[1]
 out["params_sharded"] = len(leaf.sharding.device_set) > 1 or True
 
 # 4. replicated-vs-sharded numeric equivalence: same loss on 1-device mesh
-mesh1 = jax.make_mesh((1, 1), ("data", "model"), axis_types=(auto, auto))
-jax.set_mesh(mesh1)
+mesh1 = make_auto_mesh((1, 1), ("data", "model"))
+enter_mesh(mesh1)
 params_r = init_params(cfg, jax.random.PRNGKey(0))
 opt_r = opt.init(params_r)
 batch_r = jax.device_get(batch)  # re-place on the 1-device mesh

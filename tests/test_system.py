@@ -141,8 +141,8 @@ def test_elastic_checkpoint_restore_new_sharding(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     mgr.save(3, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.compat import make_auto_mesh
+    mesh = make_auto_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     step, restored = mgr.restore_latest(tree, shardings={"w": sh})
     assert step == 3
