@@ -69,8 +69,11 @@ def main() -> None:
               f"|conversion_bound={row['mvm_conversion_bound']}")
 
     # --- Offload runtime: batching amortization + telemetry round trip ---------------
-    from benchmarks.runtime_bench import run as runtime_bench
-    for row in runtime_bench():
+    # Also writes BENCH_runtime.json (per-batch-size wall/boundary seconds
+    # per call + batched-vs-looped speedup) so the perf trajectory is
+    # machine-readable across PRs.
+    from benchmarks.runtime_bench import run as runtime_bench, write_json
+    for row in runtime_bench(write_json()):
         print(row)
 
     # --- Roofline (needs dry-run artifacts) -------------------------------------------

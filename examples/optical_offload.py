@@ -1,17 +1,23 @@
 """Run a CNN workload through the conversion-aware offload runtime.
 
 The seed version of this example *priced* offload (profile -> plan ->
-print).  This version *executes* the loop the paper implies:
+print); PR 1 *executed* the plan.  This version executes it the way the
+batching story prices it:
 
   1. profile   — serve the conv workload through the runtime's host backend;
                  telemetry measures per-category time and boundary traffic;
   2. plan      — ``PlanRouter.replan()`` prices the measured profiles on the
                  prototype 4f engine (spoiler: the conversion boundary loses,
                  the paper's conclusion) and on a batched column-parallel
-                 variant;
+                 variant.  Replanning is *adaptive*: the router picks each
+                 category's coalescing ceiling from observed traffic, and a
+                 latency ``deadline_s`` caps how deep batching may go;
   3. execute   — apply the plan: conv traffic routes through the simulated
-                 optical engine, same-shape calls coalesce into batched
-                 invocations that amortize the per-call boundary costs;
+                 optical engine; same-shape calls coalesce into ONE batched
+                 invocation each (stacked operands, vmapped 4f physics), and
+                 ``flush_async`` double-buffers the boundary — invocation
+                 k+1 stages while invocation k's analog+ADC compute is in
+                 flight, with per-result ``wait()``/``done()`` readiness;
   4. verify    — every offloaded batch is shadowed by the host reference and
                  scored against the converters' ENOB budget, so the speedup
                  story is always paired with its accuracy cost.
@@ -34,14 +40,14 @@ def conv_stack(router: PlanRouter, imgs, kernels) -> list[jax.Array]:
     Convolutions go through the router (host or optical per the current
     plan); the nonlinearities stay on the host — the paper's §3 point that
     inter-layer nonlinearity forces a conversion round trip per layer.
+    Dispatch is async: the flush returns with results in flight and each
+    layer blocks only when the relu actually needs the values.
     """
     outs = list(imgs)
     for k in kernels:
         handles = [router.submit("conv", x, kernel=k) for x in outs]
-        router.flush()                       # one batched boundary crossing
-        outs = [jax.nn.relu(h.value) for h in handles]
-        for o in outs:
-            o.block_until_ready()
+        router.executor.flush_async()        # batched + double-buffered
+        outs = [jax.nn.relu(h.wait().value) for h in handles]
     return outs
 
 
@@ -59,27 +65,43 @@ def main() -> None:
         .at[0, 0].add(0.5) for i in range(3)]
 
     fidelity = FidelityChecker()
-    executor = OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16)
+    executor = OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16,
+                               pipeline_depth=2)
     router = PlanRouter(executor)            # starts all-host: profiling mode
 
     # --- 1. profile: measured traffic, no hand-written numbers --------------
-    executor.warm("conv", imgs[0], kernel=kernels[0], backend="host")
+    # warm primes the single-item AND batched jit shapes, so the first real
+    # flush below pays zero compilation
+    executor.warm("conv", imgs[0], kernel=kernels[0], backend="host",
+                  batch=len(imgs))
     executor.telemetry.start()
     host_out = conv_stack(router, imgs, kernels)
     executor.telemetry.stop()
     print(executor.telemetry.summary())
 
-    # --- 2. plan: price the observed workload --------------------------------
+    # --- 2. plan: price the observed workload, adapt the batching ------------
     proto_plan = router.replan(spec=PROTOTYPE_4F, apply=False, max_batch=1)
     print("\n-- measured plan on the paper's prototype (Fig. 8 links) --")
     print(proto_plan.summary())
     print("paper's conclusion, reproduced from *measured* traffic: "
           f"offload chosen = {any(d.offload for d in proto_plan.decisions)}")
 
+    # adaptive batching: the ceiling follows the workload, and a latency
+    # deadline trades amortization depth against invocation wall time
+    print("\n-- adaptive per-category coalescing ceilings --")
+    print(f"unconstrained: {router.choose_max_batch()}")
+    n_in, _ = executor.telemetry.samples_per_call("conv")
+    tight = dataclasses.replace(
+        BATCHED_4F, phase_shift_captures=4).batched_step_cost(
+            n_in, batch=4, pipeline_depth=2).total_s
+    print(f"deadline {tight * 1e3:.1f} ms: "
+          f"{router.choose_max_batch(deadline_s=tight)}")
+
     plan = router.replan()                   # batched-4f spec; applies routes
     print("\n-- measured plan on the batched column-parallel variant --")
     print(plan.summary())
-    print(f"routes now: {router.routes}")
+    print(f"routes now: {router.routes}  "
+          f"max_batch now: {dict(executor.category_max_batches())}")
 
     # --- 3. execute the plan: conv through the optical engine ----------------
     opt_out = conv_stack(router, imgs, kernels)
@@ -92,7 +114,9 @@ def main() -> None:
             BATCHED_4F, phase_shift_captures=4).step_cost(512 * 512)
         print(f"\nbatched boundary cost/call: conv+interface "
               f"{per_call.conversion_s + per_call.interface_s:.4g}s "
-              f"(unbatched would pay {single.conversion_s + single.interface_s:.4g}s)")
+              f"(unbatched would pay {single.conversion_s + single.interface_s:.4g}s)"
+              f" — {conv_stats.calls} calls in {conv_stats.invocations} "
+              f"batched invocations")
 
     # --- 4. verify: the accuracy cost of the speedup --------------------------
     print(f"\nend-to-end stack divergence vs host: rel error {rel:.4f}")

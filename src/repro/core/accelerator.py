@@ -16,7 +16,13 @@ Two accelerator families are modeled:
   honest conversion costs.
 
 Cost model conventions: times in seconds, energies in joules, ``n`` counts
-scalar samples crossing the conversion boundary.
+scalar samples crossing the conversion boundary.  ``step_cost`` prices one
+serial invocation; ``batched_step_cost`` prices one invocation carrying a
+coalesced batch (fixed per-frame costs amortize), and its
+``pipeline_depth >= 2`` mode prices *double-buffered* execution where the
+write path of frame f+1 overlaps the analog+read path of frame f — the
+steady-state boundary cost becomes max(write, analog+read) per stage
+instead of their sum (see the method docstrings for the exact accounting).
 """
 
 from __future__ import annotations
@@ -150,7 +156,8 @@ class OpticalFourierAcceleratorSpec:
                         analog_s=analog_s, host_s=host_s)
 
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
-                          batch: int = 1, host_s: float = 0.0) -> StepCost:
+                          batch: int = 1, host_s: float = 0.0,
+                          pipeline_depth: int = 1) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
         The batch is packed spatially onto the aperture (the runtime's §6
@@ -161,21 +168,50 @@ class OpticalFourierAcceleratorSpec:
         converters amortize their ceil() residue across the whole batch.
         ``batch=1`` reproduces :meth:`step_cost` exactly whenever the input
         fits one frame.
+
+        ``pipeline_depth >= 2`` additionally models *double-buffered* frame
+        streaming (the runtime executor's async flush): while frame f is
+        settling, exposing, and reading out through the ADC, the DAC + SLM
+        link are already writing frame f+1 into the second buffer.  The two
+        resources — the write path (DAC, SLM link, frame handshake) and the
+        analog+read path (settle, exposure, ADC, camera link) — then run
+        concurrently, so each steady-state stage costs
+        ``max(write_path, analog + read_path)`` instead of their *sum*; only
+        the first write and the last read stick out of the overlap.  The
+        returned :class:`StepCost` keeps the slower side whole and charges
+        the faster (hidden) side only its exposed 1/frames prologue share,
+        so ``total_s`` equals the pipelined wall clock while the breakdown
+        still says which side bounds throughput.  With a single frame there
+        is nothing to overlap and the depth is ignored.
         """
         if n_out is None:
             n_out = n_in
         if batch < 1:
             raise ValueError("batch must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
         caps = self.phase_shift_captures
         frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
         dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
         adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
-        interface_s = (batch * n_in / self.slm_interface_hz
-                       + caps * batch * n_out / self.camera_interface_hz
-                       + frames * self.interface_latency_s)
+        intf_in = (batch * n_in / self.slm_interface_hz
+                   + frames * self.interface_latency_s)
+        intf_out = caps * batch * n_out / self.camera_interface_hz
         analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
                     + self.time_of_flight_s())
-        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=interface_s,
+        if pipeline_depth >= 2 and frames > 1:
+            write_side = dac_s + intf_in
+            read_side = adc_s + intf_out + analog_s
+            hidden = 1.0 / frames  # exposed prologue share of the faster side
+            if write_side <= read_side:
+                dac_s *= hidden
+                intf_in *= hidden
+            else:
+                adc_s *= hidden
+                intf_out *= hidden
+                analog_s *= hidden
+        return StepCost(dac_s=dac_s, adc_s=adc_s,
+                        interface_s=intf_in + intf_out,
                         analog_s=analog_s, host_s=host_s)
 
     def step_energy_j(self, n_in: int, n_out: int | None = None) -> float:
@@ -216,17 +252,36 @@ class OpticalMVMAcceleratorSpec:
                         analog_s=self.optical_pass_s, host_s=host_s)
 
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
-                          batch: int = 1, host_s: float = 0.0) -> StepCost:
-        """One invocation streaming ``batch`` same-shape activation sets."""
+                          batch: int = 1, host_s: float = 0.0,
+                          pipeline_depth: int = 1) -> StepCost:
+        """One invocation streaming ``batch`` same-shape activation sets.
+
+        ``pipeline_depth >= 2`` models double-buffered streaming: the DAC
+        loads activation set b+1 while set b is in the optical core / ADC,
+        so each steady-state stage costs ``max(dac, adc + pass)`` instead
+        of their sum.  The hidden (faster) side is charged only its exposed
+        1/batch prologue share — see
+        :meth:`OpticalFourierAcceleratorSpec.batched_step_cost`.
+        """
         if n_out is None:
             n_out = n_in
         if batch < 1:
             raise ValueError("batch must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
         dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
         adc_s = self.adc.time_for(batch * n_out, self.adc_lanes)
+        analog_s = batch * self.optical_pass_s
+        if pipeline_depth >= 2 and batch > 1:
+            hidden = 1.0 / batch
+            if dac_s <= adc_s + analog_s:
+                dac_s *= hidden
+            else:
+                adc_s *= hidden
+                analog_s *= hidden
         return StepCost(dac_s=dac_s, adc_s=adc_s,
                         interface_s=self.interface_latency_s,
-                        analog_s=batch * self.optical_pass_s, host_s=host_s)
+                        analog_s=analog_s, host_s=host_s)
 
     def matmul_cost(self, m: int, k: int, n: int) -> StepCost:
         """Cost of an (m,k) @ (k,n) matmul tiled onto the optical core.

@@ -36,6 +36,7 @@ __all__ = [
     "OpticalSimParams",
     "dac_quantize",
     "adc_quantize",
+    "adc_quantize_batched",
     "macro_pixel_aggregate",
     "slm_crosstalk",
     "fraunhofer",
@@ -43,6 +44,7 @@ __all__ = [
     "optical_fft2_magnitude",
     "optical_fft2_complex",
     "optical_conv2d",
+    "optical_conv2d_batched",
     "fourier_mask_for_kernel",
 ]
 
@@ -107,6 +109,23 @@ def adc_quantize(x: jax.Array, bits: int) -> jax.Array:
     """
     levels = (1 << bits) - 1
     scale = jax.lax.stop_gradient(jnp.maximum(jnp.max(x), 1e-20))
+    y = jnp.clip(x / scale, 0.0, 1.0)
+    return _ste_round(y * levels) / levels * scale
+
+
+def adc_quantize_batched(x: jax.Array, bits: int) -> jax.Array:
+    """Per-frame auto-ranged ADC over a leading batch axis.
+
+    ``x`` is (batch, ...); each frame gets its *own* full-scale setting (a
+    camera re-auto-exposes per capture, and frames packed into one batched
+    invocation are still read out as independent exposures), so the result
+    matches a Python loop of :func:`adc_quantize` over frames exactly —
+    batching the readout must not couple one frame's range to another's.
+    """
+    levels = (1 << bits) - 1
+    axes = tuple(range(1, x.ndim))
+    scale = jax.lax.stop_gradient(
+        jnp.maximum(jnp.max(x, axis=axes, keepdims=True), 1e-20))
     y = jnp.clip(x / scale, 0.0, 1.0)
     return _ste_round(y * levels) / levels * scale
 
@@ -270,3 +289,25 @@ def optical_conv2d(values: jax.Array, fourier_mask: jax.Array,
     h, w = c_rec.shape[-2], c_rec.shape[-1]
     scale = jnp.sqrt(jnp.asarray(h * w, jnp.float32))
     return jnp.real(jnp.fft.ifft2(c_rec, norm="ortho")) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def optical_conv2d_batched(values: jax.Array, fourier_mask: jax.Array,
+                           params: OpticalSimParams = IDEAL_SIM,
+                           key: jax.Array | None = None) -> jax.Array:
+    """Batched 4f convolution: ``values`` is (batch, H, W), ONE dispatch.
+
+    vmap over :func:`optical_conv2d` keeps every per-frame reduction —
+    the interferometric captures' shared ADC full-scale, the detector
+    auto-range — scoped to its own frame, so results match a Python loop
+    of single-frame calls while the host pays one dispatch and the
+    simulated aperture is programmed once for the whole batch.
+    """
+    if key is not None:
+        keys = jax.random.split(key, values.shape[0])
+        return jax.vmap(
+            lambda v, k: optical_conv2d(v, fourier_mask, params, k)
+        )(values, keys)
+    return jax.vmap(
+        lambda v: optical_conv2d(v, fourier_mask, params, None)
+    )(values)

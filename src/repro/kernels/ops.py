@@ -15,14 +15,20 @@ from repro.kernels.local_attention import local_flash_attention
 from repro.kernels.optical_dft import (
     dft_matrix_factors,
     dft_stage1,
+    dft_stage1_batched,
     dft_stage2,
+    dft_stage2_batched,
     optical_dft2_intensity,
+    optical_dft2_intensity_batched,
 )
 
 __all__ = [
     "optical_dft2_intensity",
+    "optical_dft2_intensity_batched",
     "dft_stage1",
+    "dft_stage1_batched",
     "dft_stage2",
+    "dft_stage2_batched",
     "dft_matrix_factors",
     "converter_boundary",
     "local_flash_attention",

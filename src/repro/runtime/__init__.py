@@ -10,10 +10,15 @@ that runs it.  Module map:
                boundary applied, every batch priced with a ``StepCost``),
                ``ideal`` (exact values at the zero-conversion analog bound).
   executor   — ``OffloadExecutor``: request queue that coalesces same-shape
-               calls into one invocation (amortizing per-call handshake
-               latency, SLM settle/exposure, and converter-lane ceil residue
-               — the paper's §6 batching lever) and caches DFT factor
-               matrices / Fourier masks / compiled kernels per shape.
+               calls into ONE batched invocation (stacked operands, batched
+               Pallas kernels / vmapped physics — amortizing per-call
+               handshake latency, SLM settle/exposure, converter-lane ceil
+               residue, AND the dispatch/launch overhead itself: the
+               paper's §6 batching lever, executed rather than modeled),
+               pipelined two deep (``flush_async``: invocation k+1 stages
+               while invocation k computes; per-result ``wait``/``done``),
+               with per-category coalescing ceilings (``set_max_batch``)
+               and per-shape DFT-factor / Fourier-mask / jit caches.
   telemetry  — ``RuntimeTelemetry``: measured per-category call counts,
                sample counts, and wall time, emitted as ``CategoryProfile``s
                so ``plan_offload`` re-plans from observed traffic.
@@ -22,7 +27,10 @@ that runs it.  Module map:
                converters' ENOB budget, pairing speedups with accuracy.
   router     — ``PlanRouter``: applies an ``OffloadPlan``'s decisions as a
                category->backend routing table and closes the
-               profile -> plan -> execute -> re-profile loop via ``replan``.
+               profile -> plan -> execute -> re-profile loop via ``replan``
+               — adaptively: each category's ``max_batch`` is picked from
+               observed telemetry (occupancy, per-call boundary traffic)
+               under an optional latency ``deadline_s``.
   specs      — shared demo design points (``BATCHED_4F``: upgraded
                peripherals + frame latency that only batching amortizes).
 

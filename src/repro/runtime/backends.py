@@ -27,16 +27,23 @@ Op semantics (fixed across backends so results are comparable):
   matmul(a, w)  -> a @ w with activations streamed through the converters
                    (weights held in the optical domain, amortized).
 
-Backends execute batch items one by one through per-shape jit caches:
-batching in this runtime amortizes *boundary* costs (one invocation, one
-frame, one handshake — see ``batched_step_cost``), and per-item execution
-keeps results bit-identical whether or not calls were coalesced.
+Batching is *real* on every backend: ``run`` stacks the group's same-shape
+items into one ``(K, H, W)`` array and makes ONE batched invocation — a
+single jitted ``fft2``/conv/matmul on the host, the batched Pallas DFT
+pipeline (batch as the leading grid axis, factor matrices shared across
+frames) or a vmapped 4f/MVM simulation on the analog backends — so a
+K-deep flush pays one dispatch round-trip and one kernel launch instead
+of K.  Per-item semantics are preserved inside the batch (per-frame ADC
+auto-ranging, per-item affine range mapping, per-item matmul scaling), so
+batched results match a Python loop of single-item calls to float
+tolerance (the only difference is reduction/blocking order inside XLA).
 """
 
 from __future__ import annotations
 
 import abc
 import dataclasses
+import functools
 import hashlib
 from typing import Callable, Sequence
 
@@ -52,14 +59,22 @@ from repro.core.accelerator import (
 from repro.core.optical import (
     OpticalSimParams,
     adc_quantize,
+    adc_quantize_batched,
     dac_quantize,
     fourier_mask_for_kernel,
-    optical_conv2d,
+    optical_conv2d_batched,
 )
-from repro.kernels.optical_dft import dft_matrix_factors, dft_stage1, dft_stage2
+from repro.kernels.common import INTERPRET
+from repro.kernels.optical_dft import (
+    _dft2_intensity_batched_xla,
+    dft_matrix_factors,
+    dft_stage1_batched,
+    dft_stage2_batched,
+)
 
 __all__ = [
     "CATEGORIES",
+    "CONV_CAPTURES",
     "BackendContext",
     "ExecutionBackend",
     "HostBackend",
@@ -73,19 +88,26 @@ __all__ = [
 CATEGORIES = ("fft", "conv", "matmul")
 
 # Interferometric complex recovery (needed by conv) costs 4 captures.
-_CONV_CAPTURES = 4
+CONV_CAPTURES = 4
 
 
 @dataclasses.dataclass
 class BackendContext:
     """Per-executor state shared with backends: the accelerator spec plus
     the shape-keyed caches (DFT factor matrices, Fourier-plane masks).
-    Compiled kernels are cached by jit itself, keyed on the same shapes."""
+    Compiled kernels are cached by jit itself, keyed on the same shapes.
+
+    ``pipeline_depth`` is how deep the owning executor double-buffers
+    boundary crossings; analog backends thread it into
+    ``batched_step_cost`` so the modeled price matches how the invocation
+    is actually overlapped (2 = the executor's async double-buffered
+    flush; 1 = strictly serial crossings)."""
 
     spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec
     factor_cache: dict[int, tuple[jax.Array, jax.Array]] = \
         dataclasses.field(default_factory=dict)
     mask_cache: dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
+    pipeline_depth: int = 2
 
     def factors(self, n: int) -> tuple[jax.Array, jax.Array]:
         if n not in self.factor_cache:
@@ -140,6 +162,10 @@ def _samples(x: jax.Array) -> int:
 
 # --- host: the digital baseline ----------------------------------------------
 
+# Each op accepts a leading batch axis natively: fft2/ifft2 act on the last
+# two axes (the (H, W) kernel broadcasts under the (K, H, W) stack) and
+# (K, m, k) @ (k, n) is a batched matmul.  One jitted call serves the group.
+
 
 @jax.jit
 def _host_fft_intensity(a: jax.Array) -> jax.Array:
@@ -162,80 +188,110 @@ class HostBackend(ExecutionBackend):
     name = "host"
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
+        stack = xs[0][None] if len(xs) == 1 else jnp.stack(list(xs))
         if category == "fft":
-            outs = [_host_fft_intensity(x) for x in xs]
+            out = _host_fft_intensity(stack)
         elif category == "conv":
-            outs = [_host_circular_conv(x, kernel) for x in xs]
+            out = _host_circular_conv(stack, kernel)
         elif category == "matmul":
-            outs = [_host_matmul(x, weights) for x in xs]
+            out = _host_matmul(stack, weights)
         else:
             raise ValueError(f"unknown category {category!r}")
-        return outs, None
+        return list(out), None
 
 
 # --- optical-sim: the conversion boundary, executed and priced ----------------
 
 
+@functools.partial(jax.jit, static_argnames=("params",))
+def _optical_conv_batched(stack: jax.Array, mask: jax.Array, ksum: jax.Array,
+                          params: OpticalSimParams) -> jax.Array:
+    # The DAC's full-scale range is fixed [0, 1] and the SLM cannot encode
+    # negative amplitudes, so the host affine-maps each input onto the
+    # aperture and undoes the map after: conv is linear, and
+    # conv(s*v + lo) = s*conv(v) + lo*sum(kernel) (circular conv of a
+    # constant plane is the kernel sum).  lo/scale are per frame, and
+    # ``optical_conv2d_batched`` keeps the interferometric ADC full-scale
+    # per frame too.
+    lo = jnp.min(stack, axis=(-2, -1), keepdims=True)
+    scale = jnp.maximum(jnp.max(stack, axis=(-2, -1), keepdims=True) - lo,
+                        1e-9)
+    v = (stack - lo) / scale
+    out = optical_conv2d_batched(v, mask, params, None)
+    return out * scale + lo * ksum
+
+
+@functools.partial(jax.jit, static_argnames=("dac_bits", "adc_bits"))
+def _optical_matmul_batched(stack: jax.Array, w: jax.Array, *,
+                            dac_bits: int, adc_bits: int) -> jax.Array:
+    # One streamed invocation: the batch stacks activation rows, but each
+    # item keeps its own DAC range mapping and differential ADC ranges.
+    def one(a):
+        scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-9)
+        q = dac_quantize(0.5 * (a / scale + 1.0), dac_bits) * 2.0 - 1.0
+        y = (q * scale) @ w
+        pos = jnp.maximum(y, 0.0)
+        neg = jnp.maximum(-y, 0.0)  # differential readout: two ADC ranges
+        return adc_quantize(pos, adc_bits) - adc_quantize(neg, adc_bits)
+
+    return jax.vmap(one)(stack)
+
+
 class OpticalSimBackend(ExecutionBackend):
     """Simulated analog engine with DAC/ADC quantization applied.
 
-    ``fft`` runs the fused Pallas pipeline (``dft_stage1``/``dft_stage2``
-    with cached factor matrices) then the auto-ranged ADC pass; ``conv``
-    runs the 4f physics simulator; ``matmul`` streams activations through
-    the converter models around a digital matmul standing in for the MVM
-    core.  Every batch returns a :class:`StepCost` from the spec's
-    ``batched_step_cost`` so callers always see the boundary price.
+    Every category executes the whole group in ONE batched invocation:
+    ``fft`` runs the batched Pallas pipeline (``dft_stage1_batched``/
+    ``dft_stage2_batched`` — batch on the leading grid axis, cached factor
+    matrices shared across frames) then a per-frame auto-ranged ADC pass;
+    ``conv`` runs the 4f physics simulator vmapped over the stacked batch;
+    ``matmul`` streams the stacked activations through the converter
+    models around one batched matmul standing in for the MVM core.  Every
+    batch returns a :class:`StepCost` from the spec's
+    ``batched_step_cost`` at the context's pipeline depth, so callers
+    always see the (overlap-aware) boundary price.
     """
 
     name = "optical-sim"
 
-    def _fft_one(self, a: jax.Array, ctx: BackendContext) -> jax.Array:
-        h, w = a.shape
-        whr, whi = ctx.factors(h)
-        wwr, wwi = ctx.factors(w)
-        tr, ti = dft_stage1(whr, whi, a, dac_bits=ctx.spec.dac.bits)
-        intensity = dft_stage2(tr, ti, wwr, wwi)
-        return adc_quantize(intensity, ctx.spec.adc.bits)
-
-    def _conv_one(self, a: jax.Array, kernel: jax.Array,
-                  ctx: BackendContext) -> jax.Array:
-        mask = ctx.mask(kernel)
-        # The DAC's full-scale range is fixed [0, 1] and the SLM cannot
-        # encode negative amplitudes, so the host affine-maps the input
-        # onto the aperture and undoes the map after: conv is linear, and
-        # conv(s*v + lo) = s*conv(v) + lo*sum(kernel) (circular conv of a
-        # constant plane is the kernel sum).
-        lo = jnp.min(a)
-        scale = jnp.maximum(jnp.max(a) - lo, 1e-9)
-        v = (a - lo) / scale
-        out = optical_conv2d(v, mask, ctx.sim_params, None)
-        return out * scale + lo * jnp.sum(kernel)
-
-    def _matmul_one(self, a: jax.Array, w: jax.Array,
-                    ctx: BackendContext) -> jax.Array:
-        scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-9)
-        q = dac_quantize(0.5 * (a / scale + 1.0), ctx.spec.dac.bits) * 2.0 - 1.0
-        y = (q * scale) @ w
-        pos = jnp.maximum(y, 0.0)
-        neg = jnp.maximum(-y, 0.0)  # differential readout: two ADC ranges
-        return (adc_quantize(pos, ctx.spec.adc.bits)
-                - adc_quantize(neg, ctx.spec.adc.bits))
+    def _fft_batched(self, stack: jax.Array, ctx: BackendContext) -> jax.Array:
+        if INTERPRET:
+            # Off-TPU the Pallas interpreter copies the whole batched
+            # output per grid step (a correctness simulator, not a perf
+            # one): run the same fused semantics as one XLA dispatch.
+            intensity = _dft2_intensity_batched_xla(
+                stack, dac_bits=ctx.spec.dac.bits)
+        else:
+            _, h, w = stack.shape
+            whr, whi = ctx.factors(h)
+            wwr, wwi = ctx.factors(w)
+            tr, ti = dft_stage1_batched(whr, whi, stack,
+                                        dac_bits=ctx.spec.dac.bits)
+            intensity = dft_stage2_batched(tr, ti, wwr, wwi)
+        return adc_quantize_batched(intensity, ctx.spec.adc.bits)
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
         batch = len(xs)
         n_in = _samples(xs[0])
+        stack = jnp.stack(list(xs))
+        depth = ctx.pipeline_depth
         if category == "fft":
-            outs = [self._fft_one(x, ctx) for x in xs]
-            cost = ctx.spec.batched_step_cost(n_in, _samples(outs[0]),
-                                              batch=batch)
+            out = self._fft_batched(stack, ctx)
+            cost = ctx.spec.batched_step_cost(n_in, _samples(out[0]),
+                                              batch=batch,
+                                              pipeline_depth=depth)
         elif category == "conv":
-            outs = [self._conv_one(x, kernel, ctx) for x in xs]
+            mask = ctx.mask(kernel)
+            out = _optical_conv_batched(stack, mask, jnp.sum(kernel),
+                                        ctx.sim_params)
             spec4 = dataclasses.replace(ctx.spec,
-                                        phase_shift_captures=_CONV_CAPTURES)
-            cost = spec4.batched_step_cost(n_in, _samples(outs[0]),
-                                           batch=batch)
+                                        phase_shift_captures=CONV_CAPTURES)
+            cost = spec4.batched_step_cost(n_in, _samples(out[0]),
+                                           batch=batch, pipeline_depth=depth)
         elif category == "matmul":
-            outs = [self._matmul_one(x, weights, ctx) for x in xs]
+            out = _optical_matmul_batched(stack, weights,
+                                          dac_bits=ctx.spec.dac.bits,
+                                          adc_bits=ctx.spec.adc.bits)
             m, k = xs[0].shape
             n = weights.shape[-1]
             # Batching stacks activations along m: one streamed invocation.
@@ -244,7 +300,7 @@ class OpticalSimBackend(ExecutionBackend):
                 interface_s=ctx.spec.interface_latency_s)
         else:
             raise ValueError(f"unknown category {category!r}")
-        return outs, cost
+        return list(out), cost
 
 
 # --- ideal: the zero-conversion-cost analog bound -----------------------------
@@ -267,7 +323,7 @@ class IdealBackend(ExecutionBackend):
         if isinstance(spec, OpticalMVMAcceleratorSpec):
             analog = len(xs) * spec.optical_pass_s
         else:
-            caps = _CONV_CAPTURES if category == "conv" \
+            caps = CONV_CAPTURES if category == "conv" \
                 else spec.phase_shift_captures
             analog = ((spec.slm_settle_s + spec.exposure_s) * caps
                       + spec.time_of_flight_s())

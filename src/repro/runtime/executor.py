@@ -2,26 +2,38 @@
 
 Callers ``submit`` accelerable ops (fft / conv / matmul) and the executor
 coalesces queued calls of the same shape into one accelerator invocation at
-``flush`` time.  That is the paper's §6 batching lever made operational:
-per-invocation boundary costs (link handshake latency, SLM settle/exposure,
-converter-lane ceil residue) amortize across the batch, so the modeled
-per-call conversion + interface time *drops* as the queue deepens, while
-results stay bit-identical to unbatched execution (items run one by one
-through per-shape jit caches; only the boundary accounting is shared).
+``flush`` time.  That is the paper's §6 batching lever made operational —
+and made *real*: each group executes as ONE batched backend invocation
+(stacked ``(K, H, W)`` operands, batched Pallas kernels / vmapped physics),
+so a K-deep flush pays one dispatch round-trip and one kernel launch
+instead of K, while per-invocation boundary costs (link handshake latency,
+SLM settle/exposure, converter-lane ceil residue) amortize across the batch
+in the modeled price.
+
+``flush`` is additionally *pipelined* two deep: dispatch is asynchronous
+(JAX async dispatch — no premature ``block_until_ready``), so while group
+k's analog+ADC compute is in flight, group k+1's host-side staging and
+DAC-prep proceed, and only when a third group wants to dispatch does the
+oldest get retired (blocked + recorded).  ``flush_async`` exposes the
+non-blocking form: results fill immediately with async values, readiness is
+queryable per result (:meth:`OffloadResult.done`), and telemetry for still
+in-flight groups lands at retire time (``drain`` / next flush / ``wait``).
 
 Execution is recorded into :class:`RuntimeTelemetry` — call counts, sample
 counts, wall time, modeled cost — so ``telemetry.profiles()`` can re-enter
 ``plan_offload`` and the plan can be re-derived from observed traffic.
 Optionally every optical-sim batch is shadowed by the host backend and
 scored by a :class:`FidelityChecker`, pairing each speedup with its
-quantization-error cost.
+quantization-error cost (shadow scoring needs concrete values, so fidelity
+batches retire synchronously — validation mode trades the pipeline away).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 
@@ -48,11 +60,19 @@ def _block(x: Any) -> None:
             leaf.block_until_ready()
 
 
+def _is_ready(x: Any) -> bool:
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "is_ready") and not leaf.is_ready():
+            return False
+    return True
+
+
 class OffloadResult:
-    """Handle for a submitted call; materializes at ``flush``.
+    """Handle for a submitted call; materializes at ``flush``/``flush_async``.
 
     Attributes (valid once ``ready``):
-      value: the op result.
+      value: the op result (an *asynchronously dispatched* jax array after
+        ``flush_async`` — usable immediately, concrete after ``wait``).
       cost: modeled per-call share of the invocation's :class:`StepCost`.
       backend: backend name that served the call.
       batch: how many calls shared the invocation.
@@ -71,7 +91,25 @@ class OffloadResult:
     def get(self) -> jax.Array:
         if not self.ready:
             self._executor.flush()
+        else:
+            self.wait()
         return self.value
+
+    def done(self) -> bool:
+        """True when the underlying device computation has completed.
+
+        ``ready`` means the handle is filled (dispatch happened); ``done``
+        additionally means the value would materialize without blocking.
+        """
+        return self.ready and _is_ready(self.value)
+
+    def wait(self) -> "OffloadResult":
+        """Block until this result's computation (and its telemetry) lands."""
+        if not self.ready:
+            self._executor.flush()
+        self._executor._retire_containing(self)
+        _block(self.value)
+        return self
 
     def _fill(self, value: jax.Array, cost: StepCost, backend: str,
               batch: int, fidelity: FidelityReport | None) -> None:
@@ -97,8 +135,20 @@ class _Pending:
                 str(self.x.dtype), id(self.kernel), id(self.weights))
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unretired batched invocation."""
+
+    chunk: list[_Pending]
+    be: ExecutionBackend
+    outs: list[jax.Array]
+    modeled: StepCost | None
+    t0: float
+    dispatch_s: float  # host time spent staging + dispatching (be.run)
+
+
 class OffloadExecutor:
-    """Queue + batcher + cache in front of the backend registry.
+    """Queue + batcher + two-deep pipeline in front of the backend registry.
 
     Args:
       spec: accelerator priced/simulated by the analog backends.
@@ -107,8 +157,15 @@ class OffloadExecutor:
       telemetry: shared :class:`RuntimeTelemetry` (created if omitted).
       fidelity: optional :class:`FidelityChecker`; when set, optical-sim
         batches are shadowed by the host backend and scored (validation
-        mode — the shadow run is excluded from telemetry).
+        mode — the shadow run is excluded from telemetry, and fidelity
+        batches retire synchronously, bypassing the async pipeline).
       max_batch: largest number of calls coalesced into one invocation.
+        A global ceiling; per-category ceilings (``set_max_batch``) let the
+        router adapt coalescing depth per category without touching it.
+      pipeline_depth: how many batched invocations may be in flight at
+        once.  2 (default) double-buffers the boundary: group k+1 stages
+        while group k computes.  1 restores strictly serial
+        dispatch-then-block crossings.
     """
 
     def __init__(self,
@@ -118,20 +175,43 @@ class OffloadExecutor:
                  default_backend: str = "optical-sim",
                  telemetry: RuntimeTelemetry | None = None,
                  fidelity: FidelityChecker | None = None,
-                 max_batch: int = 32) -> None:
+                 max_batch: int = 32,
+                 pipeline_depth: int = 2) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
-        self.ctx = BackendContext(spec=spec)
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth)
         self.default_backend = default_backend
         self.telemetry = telemetry or RuntimeTelemetry()
         self.fidelity = fidelity
         self.max_batch = max_batch
+        self.pipeline_depth = pipeline_depth
+        self._category_max_batch: dict[str, int] = {}
         self._queue: list[_Pending] = []
+        self._inflight: collections.deque[_Inflight] = collections.deque()
+        self._last_retire_end = 0.0
         self._backends: dict[str, ExecutionBackend] = {}
 
     @property
     def spec(self):
         return self.ctx.spec
+
+    # -- per-category batching ceilings ---------------------------------------
+    def max_batch_for(self, category: str) -> int:
+        """Effective coalescing ceiling for ``category`` (global cap applies)."""
+        return min(self._category_max_batch.get(category, self.max_batch),
+                   self.max_batch)
+
+    def set_max_batch(self, category: str, k: int) -> None:
+        """Set a per-category coalescing ceiling (the adaptive-batching hook
+        ``PlanRouter.replan`` drives from observed occupancy + deadline)."""
+        if k < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._category_max_batch[category] = k
+
+    def category_max_batches(self) -> Mapping[str, int]:
+        return dict(self._category_max_batch)
 
     def _backend(self, name: str) -> ExecutionBackend:
         if name not in self._backends:
@@ -171,26 +251,66 @@ class OffloadExecutor:
     def warm(self, category: str, x: jax.Array, *,
              kernel: jax.Array | None = None,
              weights: jax.Array | None = None,
-             backend: str | None = None) -> None:
+             backend: str | None = None,
+             batch: int | None = None) -> None:
         """Execute once without recording: primes the per-shape jit/factor
         caches so first-call compilation time does not pollute measured
-        profiles (call before ``telemetry.start()``)."""
+        profiles (call before ``telemetry.start()``).
+
+        Batched execution compiles per *stacked* shape, so priming only the
+        single-item shape would leave the first real flush paying the
+        batched compile.  This warms both the single-item ``(1, ...)``
+        stack and the ``(batch, ...)`` stack the flusher will actually
+        dispatch (``batch`` defaults to the category's effective
+        ``max_batch`` ceiling).  A ragged tail chunk (K % max_batch calls)
+        is a shape of its own and still compiles on first encounter — call
+        ``warm`` again with ``batch=tail`` when the tail size is known and
+        the measurement window cannot tolerate it.
+        """
         name = self._validate(category, backend, kernel, weights)
-        outs, _ = self._backend(name).run(category, [x], self.ctx,
-                                          kernel=kernel, weights=weights)
-        _block(outs)
+        be = self._backend(name)
+        if batch is None:
+            batch = self.max_batch_for(category)
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        for b in sorted({1, batch}):
+            outs, _ = be.run(category, [x] * b, self.ctx,
+                             kernel=kernel, weights=weights)
+            _block(outs)
 
     @property
     def pending(self) -> int:
         return len(self._queue)
 
-    # -- the batcher -----------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        """Dispatched batched invocations not yet retired (blocked+recorded)."""
+        return len(self._inflight)
+
+    # -- the pipelined batcher -------------------------------------------------
     def flush(self) -> list[OffloadResult]:
-        """Execute everything queued, coalescing same-shape calls.
+        """Execute everything queued and block until all results landed.
+
+        The blocking wrapper around :meth:`flush_async` + :meth:`drain`:
+        groups still overlap in flight while the flush proceeds, but by
+        return time every result is concrete and recorded.
+        """
+        done = self.flush_async()
+        self.drain()
+        return done
+
+    def flush_async(self) -> list[OffloadResult]:
+        """Execute everything queued without a final barrier.
 
         Requests group on (category, backend, shape, dtype, operand
         identity); each group dispatches as ceil(K / max_batch) batched
-        invocations, preserving submission order within a group.
+        invocations, preserving submission order within a group.  Each
+        invocation is dispatched asynchronously and its results are filled
+        immediately with async values (``ready`` is True, ``done()`` may
+        not be); at most ``pipeline_depth`` invocations stay in flight, so
+        dispatching invocation k+depth first retires invocation k (blocks
+        it and records telemetry).  Invocations still in flight on return
+        retire at the next flush, ``drain``, or ``result.wait()``.
         """
         queue, self._queue = self._queue, []
         groups: dict[tuple, list[_Pending]] = {}
@@ -198,41 +318,102 @@ class OffloadExecutor:
             groups.setdefault(p.group_key(), []).append(p)
         done: list[OffloadResult] = []
         for members in groups.values():
-            for i in range(0, len(members), self.max_batch):
-                chunk = members[i:i + self.max_batch]
-                self._dispatch(chunk)
+            cap = self.max_batch_for(members[0].category)
+            for i in range(0, len(members), cap):
+                chunk = members[i:i + cap]
+                self._dispatch_async(chunk)
                 done.extend(p.result for p in chunk)
         return done
 
-    def _dispatch(self, chunk: list[_Pending]) -> None:
+    def drain(self) -> None:
+        """Retire every in-flight invocation (block + record telemetry)."""
+        while self._inflight:
+            self._retire(self._inflight.popleft())
+
+    def _retire_containing(self, result: OffloadResult) -> None:
+        """Retire in-flight invocations up to the one holding ``result``
+        (retirement is in dispatch order to keep wall accounting honest)."""
+        while self._inflight and any(p.result is result
+                                     for f in self._inflight
+                                     for p in f.chunk):
+            self._retire(self._inflight.popleft())
+
+    def _dispatch_async(self, chunk: list[_Pending]) -> None:
+        # Keep at most pipeline_depth invocations in flight: retiring here
+        # is what makes the pipeline two-deep rather than unbounded (frame
+        # buffers are finite), and it blocks on the *oldest* invocation
+        # while this chunk's host-side staging below overlaps it.
+        while len(self._inflight) >= self.pipeline_depth:
+            self._retire(self._inflight.popleft())
         head = chunk[0]
         be = self._backend(head.backend)
         xs = [p.x for p in chunk]
         t0 = time.perf_counter()
         outs, modeled = be.run(head.category, xs, self.ctx,
                                kernel=head.kernel, weights=head.weights)
-        _block(outs)
-        wall = time.perf_counter() - t0
+        dispatch_s = time.perf_counter() - t0
         batch = len(chunk)
-        samples_in = sum(int(p.x.size) for p in chunk)
-        samples_out = sum(int(o.size) for o in outs)
-        self.telemetry.record(
-            head.category, be.name, calls=batch, samples_in=samples_in,
-            samples_out=samples_out, wall_s=wall, modeled=modeled)
-        report = None
+        # host-like backends have no modeled price: provisional cost is the
+        # staging+dispatch wall share (refined to the full measured wall at
+        # retire), so ``cost`` honors the 'valid once ready' contract even
+        # between flush_async and drain
+        share = modeled.scaled(1.0 / batch) if modeled is not None \
+            else StepCost(0.0, 0.0, 0.0, 0.0, host_s=dispatch_s / batch)
+        for p, out in zip(chunk, outs):
+            # async fill: the value is dispatched, not yet materialized
+            p.result._fill(out, share, be.name, batch, None)
+        inflight = _Inflight(chunk=chunk, be=be, outs=outs,
+                             modeled=modeled, t0=t0, dispatch_s=dispatch_s)
         if self.fidelity is not None and be.name == "optical-sim":
+            # shadow scoring needs concrete values: validation mode is
+            # synchronous by construction
+            self._retire(inflight)
+        else:
+            self._inflight.append(inflight)
+
+    def _retire(self, f: _Inflight) -> None:
+        already_done = _is_ready(f.outs)
+        _block(f.outs)
+        now = time.perf_counter()
+        if already_done:
+            # deferred retirement: the computation finished while the
+            # caller did unrelated host work between flush_async and
+            # wait()/drain().  Wall-clock would bill that idle time to the
+            # invocation (and poison the profiles replan derives); charge
+            # only the host-side staging+dispatch window we observed.
+            wall = f.dispatch_s
+        else:
+            # overlapped invocations must not double-count shared wall
+            # time: charge only from where the previous retirement ended
+            wall = now - max(f.t0, self._last_retire_end)
+        self._last_retire_end = now
+        batch = len(f.chunk)
+        samples_in = sum(int(p.x.size) for p in f.chunk)
+        samples_out = sum(int(o.size) for o in f.outs)
+        self.telemetry.record(
+            f.chunk[0].category, f.be.name, calls=batch,
+            samples_in=samples_in, samples_out=samples_out, wall_s=wall,
+            modeled=f.modeled)
+        report = None
+        if self.fidelity is not None and f.be.name == "optical-sim":
             t1 = time.perf_counter()
             refs, _ = self._backend("host").run(
-                head.category, xs, self.ctx,
-                kernel=head.kernel, weights=head.weights)
+                f.chunk[0].category, [p.x for p in f.chunk], self.ctx,
+                kernel=f.chunk[0].kernel, weights=f.chunk[0].weights)
             _block(refs)
             spec = self.ctx.spec
             enob = min(spec.dac.effective_bits, spec.adc.effective_bits)
-            report = self.fidelity.check(head.category, be.name, outs, refs,
-                                         enob=enob)
+            report = self.fidelity.check(f.chunk[0].category, f.be.name,
+                                         f.outs, refs, enob=enob)
             # validation overhead, not workload: keep it out of 'other'
-            self.telemetry.discount_window(time.perf_counter() - t1)
-        share = modeled.scaled(1.0 / batch) if modeled is not None \
-            else StepCost(0.0, 0.0, 0.0, 0.0, host_s=wall / batch)
-        for p, out in zip(chunk, outs):
-            p.result._fill(out, share, be.name, batch, report)
+            dt = time.perf_counter() - t1
+            self.telemetry.discount_window(dt)
+            self._last_retire_end += dt
+        if f.modeled is None:
+            # refine the provisional dispatch-only share to the measured wall
+            measured = StepCost(0.0, 0.0, 0.0, 0.0, host_s=wall / batch)
+            for p in f.chunk:
+                p.result.cost = measured
+        if report is not None:
+            for p in f.chunk:
+                p.result.fidelity = report

@@ -18,8 +18,10 @@ plan's decisions.
 
 from __future__ import annotations
 
+import dataclasses
+
 from repro.core.planner import CategoryProfile, OffloadPlan, plan_offload
-from repro.runtime.backends import CATEGORIES
+from repro.runtime.backends import CATEGORIES, CONV_CAPTURES
 from repro.runtime.executor import OffloadExecutor, OffloadResult
 
 __all__ = ["PlanRouter"]
@@ -36,6 +38,15 @@ class PlanRouter:
         self.host_backend = host_backend
         self.routes: dict[str, str] = {c: host_backend for c in CATEGORIES}
         self.plan: OffloadPlan | None = None
+        # Operator-set per-category ceilings are constraints the adaptive
+        # choice never exceeds — and never destroys: the original value is
+        # snapshotted before the router writes a (possibly deadline-
+        # lowered) ceiling of its own, so relaxing a deadline can raise
+        # the ceiling back up to the operator's bound.  A ceiling is
+        # recognized as operator-set when it differs from what this router
+        # last wrote.
+        self._operator_caps: dict[str, int] = {}
+        self._router_set: dict[str, int] = {}
         if plan is not None:
             self.apply(plan)
 
@@ -76,31 +87,94 @@ class PlanRouter:
     def pending(self) -> int:
         return self.executor.pending
 
+    # -- adaptive batching -----------------------------------------------------
+    def choose_max_batch(self, deadline_s: float | None = None) -> dict[str, int]:
+        """Pick a per-category coalescing ceiling from measured telemetry.
+
+        The amortization side of the trade wants the deepest batch the
+        executor allows (every coalesced call shares the handshake, settle,
+        and lane-ceil residue); the latency side caps it: with a
+        ``deadline_s``, the modeled batched invocation — priced from the
+        category's *observed* per-call boundary traffic at the executor's
+        pipeline depth — must still finish within the deadline, so the
+        depth is halved until it fits.  Categories with no recorded
+        traffic are left at the executor's global ceiling.
+
+        A per-category ceiling the *operator* set directly
+        (``executor.set_max_batch``) is an upper bound the adaptive choice
+        never exceeds; ceilings this router itself installed are re-derived
+        from scratch on each call (so relaxing a deadline raises them
+        again, up to the operator's bound where one exists).
+        """
+        ex, telemetry = self.executor, self.executor.telemetry
+        spec = ex.spec
+        chosen: dict[str, int] = {}
+        for cat in telemetry.categories():
+            k = min(ex.max_batch, self._operator_bound(cat))
+            n_in, n_out = telemetry.samples_per_call(cat)
+            if (deadline_s is not None and n_in > 0
+                    and hasattr(spec, "batched_step_cost")):
+                pricing_spec = spec
+                if cat == "conv" and hasattr(spec, "phase_shift_captures"):
+                    # conv pays interferometric complex recovery: the
+                    # backend prices it at 4 captures, so the deadline
+                    # check must too or the chosen depth blows the bound
+                    pricing_spec = dataclasses.replace(
+                        spec, phase_shift_captures=CONV_CAPTURES)
+                while k > 1 and pricing_spec.batched_step_cost(
+                        n_in, n_out or None, batch=k,
+                        pipeline_depth=ex.pipeline_depth).total_s > deadline_s:
+                    k //= 2
+            chosen[cat] = max(k, 1)
+        return chosen
+
+    def _operator_bound(self, cat: str) -> int:
+        """Upper bound the operator imposed on ``cat``'s ceiling (the
+        executor's global cap when they never set one).  A current ceiling
+        that is not the router's own last write is (re-)snapshotted as the
+        operator's."""
+        current = self.executor.category_max_batches().get(cat)
+        if current is not None and current != self._router_set.get(cat):
+            self._operator_caps[cat] = current
+        return self._operator_caps.get(cat, self.executor.max_batch)
+
     # -- the loop-closer -------------------------------------------------------
     def replan(self, spec=None,
                extra_profiles: tuple[CategoryProfile, ...] = (),
-               apply: bool = True, max_batch: int | None = None) -> OffloadPlan:
+               apply: bool = True, max_batch: int | None = None,
+               deadline_s: float | None = None) -> OffloadPlan:
         """Re-derive the plan from the executor's measured telemetry.
 
         By default pricing batches at the *observed* queue occupancy
-        (capped by the executor's ``max_batch``): traffic that arrived one
-        call per flush gets no handshake amortization credit, traffic that
-        arrived in deep groups does — so the plan's verdict matches how
-        this runtime actually executed.  Pass ``max_batch=1`` for the
-        paper's serial model, or an explicit value to price a hypothetical
-        batching depth.  ``extra_profiles`` lets callers append workload
-        the runtime never saw (e.g. a known non-offloadable phase);
-        ``apply=False`` prices without touching the routing table.
+        (capped by the adaptively chosen per-category ceiling): traffic
+        that arrived one call per flush gets no handshake amortization
+        credit, traffic that arrived in deep groups does — so the plan's
+        verdict matches how this runtime actually executed.  Pass
+        ``max_batch=1`` for the paper's serial model, or an explicit value
+        to price a hypothetical batching depth (explicit values disable
+        adaptation).
+
+        Adaptive batching: when ``max_batch`` is omitted, the router also
+        *sets* the executor's per-category coalescing ceilings to
+        :meth:`choose_max_batch`'s picks (observed traffic + optional
+        ``deadline_s`` latency bound) as part of ``apply`` — the cap stops
+        being a fixed constructor argument and follows the workload.
+
+        ``extra_profiles`` lets callers append workload the runtime never
+        saw (e.g. a known non-offloadable phase); ``apply=False`` prices
+        without touching the routing table or the executor's ceilings.
         """
         telemetry = self.executor.telemetry
         profiles = list(telemetry.profiles())
         profiles.extend(extra_profiles)
+        chosen: dict[str, int] | None = None
         if max_batch is None:
-            # per-category: one category's deep batches must not credit
-            # another category's serial traffic with amortization
+            chosen = self.choose_max_batch(deadline_s)
+            # price at what the traffic achieved, bounded by the adaptive
+            # ceiling: one category's deep batches must not credit another
+            # category's serial traffic with amortization
             batch: int | dict[str, int] = {
-                cat: min(self.executor.max_batch,
-                         telemetry.observed_occupancy(cat))
+                cat: min(chosen[cat], telemetry.observed_occupancy(cat))
                 for cat in telemetry.categories()}
         else:
             batch = max_batch
@@ -108,6 +182,10 @@ class PlanRouter:
                             max_batch=batch)
         if apply:
             self.apply(plan)
+            if chosen is not None:
+                for cat, k in chosen.items():
+                    self.executor.set_max_batch(cat, k)
+                    self._router_set[cat] = k
         return plan
 
     def summary(self) -> str:

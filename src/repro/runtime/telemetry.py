@@ -139,6 +139,23 @@ class RuntimeTelemetry:
     def recorded_s(self) -> float:
         return sum(st.wall_s for st in self.stats.values())
 
+    def samples_per_call(self, category: str) -> tuple[int, int]:
+        """Observed mean boundary traffic per call: (n_in, n_out) scalars.
+
+        This is what adaptive batching prices invocations from — the
+        per-call DAC/ADC sample counts the category's traffic actually
+        exhibited, not a hand-written workload guess."""
+        calls = s_in = s_out = 0
+        for (cat, _backend), st in self.stats.items():
+            if cat != category:
+                continue
+            calls += st.calls
+            s_in += st.samples_in
+            s_out += st.samples_out
+        if calls <= 0:
+            return (0, 0)
+        return (s_in // calls, s_out // calls)
+
     def observed_occupancy(self, category: str | None = None) -> int:
         """Average calls coalesced per invocation in the observed traffic,
         per category (or globally when ``category`` is None).
