@@ -109,6 +109,11 @@ class OpticalFourierAcceleratorSpec:
         one 60 Hz display frame period for the prototype's USB/DSI links).
         This is the term batching amortizes (§6); 0 preserves the paper's
         throughput-only calibration.
+      device_sync_s: per-device synchronization epsilon for multi-aperture
+        (sharded) execution: when one invocation is scattered across
+        ``n_devices`` replicated accelerators, the host pays this barrier
+        cost once per participating device on top of the slowest device's
+        boundary crossing (see ``batched_step_cost(n_devices=...)``).
     """
 
     name: str
@@ -125,6 +130,7 @@ class OpticalFourierAcceleratorSpec:
     macro_pixel: int = 1
     phase_shift_captures: int = 1
     interface_latency_s: float = 0.0
+    device_sync_s: float = 0.0
 
     @property
     def usable_pixels(self) -> int:
@@ -157,7 +163,8 @@ class OpticalFourierAcceleratorSpec:
 
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
-                          pipeline_depth: int = 1) -> StepCost:
+                          pipeline_depth: int = 1,
+                          n_devices: int = 1) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
         The batch is packed spatially onto the aperture (the runtime's §6
@@ -183,6 +190,19 @@ class OpticalFourierAcceleratorSpec:
         so ``total_s`` equals the pipelined wall clock while the breakdown
         still says which side bounds throughput.  With a single frame there
         is nothing to overlap and the depth is ignored.
+
+        ``n_devices >= 2`` prices *multi-aperture* (sharded) execution —
+        how photonic systems actually scale: replicate apertures rather
+        than grow one.  The batch scatters across ``n_devices`` replicated
+        accelerators, each carrying ``ceil(batch / n_devices)`` inputs
+        through its OWN converters and links (per-invocation fixed costs do
+        NOT amortize across devices — every device pays its own handshake,
+        settle, and exposure).  The devices run concurrently, so the wall
+        cost is the slowest (largest) shard's cost — max-over-devices —
+        plus one ``device_sync_s`` of barrier overhead per *participating*
+        device charged to the interface (a group shallower than the fleet
+        occupies only ``batch`` devices, matching the runtime's
+        ``shard_sizes`` split).
         """
         if n_out is None:
             n_out = n_in
@@ -190,6 +210,16 @@ class OpticalFourierAcceleratorSpec:
             raise ValueError("batch must be >= 1")
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if n_devices > 1:
+            eff = min(n_devices, batch)
+            per = self.batched_step_cost(
+                n_in, n_out, batch=math.ceil(batch / eff),
+                host_s=host_s, pipeline_depth=pipeline_depth)
+            return dataclasses.replace(
+                per, interface_s=per.interface_s
+                + eff * self.device_sync_s)
         caps = self.phase_shift_captures
         frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
         dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
@@ -240,6 +270,7 @@ class OpticalMVMAcceleratorSpec:
     optical_pass_s: float = 1.0e-9
     mac_energy_j: float = 1.0e-17  # sub-fJ optical MAC (their claim)
     interface_latency_s: float = 0.0  # per-invocation host<->engine handshake
+    device_sync_s: float = 0.0        # per-device sync epsilon (sharded mode)
 
     def macs_per_pass(self) -> int:
         return self.rows * self.cols
@@ -253,7 +284,8 @@ class OpticalMVMAcceleratorSpec:
 
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
-                          pipeline_depth: int = 1) -> StepCost:
+                          pipeline_depth: int = 1,
+                          n_devices: int = 1) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
 
         ``pipeline_depth >= 2`` models double-buffered streaming: the DAC
@@ -262,6 +294,12 @@ class OpticalMVMAcceleratorSpec:
         of their sum.  The hidden (faster) side is charged only its exposed
         1/batch prologue share — see
         :meth:`OpticalFourierAcceleratorSpec.batched_step_cost`.
+
+        ``n_devices >= 2`` prices sharded execution across replicated MVM
+        engines: max-over-devices (each device streams its
+        ``ceil(batch / n_devices)`` share through its own converters) plus
+        one ``device_sync_s`` per participating device (at most ``batch``
+        of them can take a shard).
         """
         if n_out is None:
             n_out = n_in
@@ -269,6 +307,16 @@ class OpticalMVMAcceleratorSpec:
             raise ValueError("batch must be >= 1")
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if n_devices > 1:
+            eff = min(n_devices, batch)
+            per = self.batched_step_cost(
+                n_in, n_out, batch=math.ceil(batch / eff),
+                host_s=host_s, pipeline_depth=pipeline_depth)
+            return dataclasses.replace(
+                per, interface_s=per.interface_s
+                + eff * self.device_sync_s)
         dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
         adc_s = self.adc.time_for(batch * n_out, self.adc_lanes)
         analog_s = batch * self.optical_pass_s

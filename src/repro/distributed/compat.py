@@ -12,7 +12,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_auto_mesh", "enter_mesh", "current_mesh_axis_names"]
+__all__ = ["make_auto_mesh", "enter_mesh", "current_mesh_axis_names",
+           "current_mesh"]
+
+# Last mesh activated through enter_mesh — the version-agnostic fallback for
+# current_mesh() when neither the new concrete-mesh API nor the 0.4.x
+# resource env can report one.
+_LAST_ENTERED: jax.sharding.Mesh | None = None
 
 
 def make_auto_mesh(shape, axes) -> jax.sharding.Mesh:
@@ -31,11 +37,13 @@ def enter_mesh(mesh: jax.sharding.Mesh) -> None:
     New jax: ``jax.set_mesh``.  jax 0.4.x: enter the ``with mesh:`` resource
     env and deliberately never exit (callers are process-scoped scripts —
     dry-run cells and subprocess lowering tests)."""
+    global _LAST_ENTERED
     set_mesh = getattr(jax, "set_mesh", None)
     if set_mesh is not None:
         set_mesh(mesh)
     else:
         mesh.__enter__()
+    _LAST_ENTERED = mesh
 
 
 def current_mesh_axis_names() -> tuple[str, ...]:
@@ -55,3 +63,27 @@ def current_mesh_axis_names() -> tuple[str, ...]:
     except (ImportError, AttributeError):
         pass
     return ()
+
+
+def current_mesh() -> jax.sharding.Mesh | None:
+    """The active *concrete* context mesh, or None off-mesh.
+
+    Unlike :func:`current_mesh_axis_names` this must return a mesh with
+    real devices attached (the sharded offload backend scatters work onto
+    them), so the abstract-mesh path is skipped: new jax goes through
+    ``get_concrete_mesh``, 0.4.x through the resource env, and the
+    :func:`enter_mesh` bookkeeping covers whichever API recorded neither.
+    """
+    get_concrete = getattr(jax.sharding, "get_concrete_mesh", None)
+    if get_concrete is not None:
+        mesh = get_concrete()
+        if mesh is not None and not getattr(mesh, "empty", True):
+            return mesh
+    try:  # jax 0.4.x ``with mesh:`` resource env
+        from jax._src import mesh as _mesh_lib
+        env_mesh = _mesh_lib.thread_resources.env.physical_mesh
+        if not env_mesh.empty:
+            return env_mesh
+    except (ImportError, AttributeError):
+        pass
+    return _LAST_ENTERED

@@ -16,7 +16,7 @@ import jax
 from jax.sharding import PartitionSpec as P
 
 __all__ = ["constrain", "batch_axes", "current_axis_names", "logical_to_mesh",
-           "activation_sharding_mode", "constrain_residual"]
+           "activation_sharding_mode", "constrain_residual", "shard_devices"]
 
 
 def activation_sharding_mode() -> str:
@@ -85,3 +85,22 @@ def batch_axes() -> tuple[str, ...] | None:
     axes = current_axis_names()
     got = tuple(a for a in ("pod", "data") if a in axes)
     return got if got else None
+
+
+def shard_devices(n: int) -> list[jax.Device] | None:
+    """Pick ``n`` distinct devices to scatter work shards onto.
+
+    Prefers the active context mesh's devices (so a sharded offload running
+    inside a mesh program lands on the mesh's own chips), falling back to
+    ``jax.devices()``.  Returns None when fewer than ``n`` devices exist —
+    the caller's cue to take the sequential off-mesh fallback (CPU tests:
+    one device, shards dispatch in turn with identical numerics).
+    """
+    if n <= 1:
+        return None
+    from repro.distributed.compat import current_mesh
+    mesh = current_mesh()
+    devs = list(mesh.devices.flat) if mesh is not None else list(jax.devices())
+    if len(devs) < n:
+        return None
+    return devs[:n]

@@ -25,12 +25,21 @@ that runs it.  Module map:
   fidelity   — ``FidelityChecker``: shadows optical-sim batches with the
                host reference and scores quantization error against the
                converters' ENOB budget, pairing speedups with accuracy.
+  sharded    — ``ShardedOpticalBackend``: scatters one batched invocation
+               across ``n_devices`` replicated simulated accelerators —
+               group sharding (the stacked flush group splits across
+               devices, each paying its own DAC/ADC crossing; modeled wall
+               = max-over-devices + sync) or frame sharding (one large
+               frame tiles onto multiple apertures with overlap-save halos
+               for conv) — with mesh-aware device placement and an
+               off-mesh sequential fallback (CPU tests).
   router     — ``PlanRouter``: applies an ``OffloadPlan``'s decisions as a
                category->backend routing table and closes the
                profile -> plan -> execute -> re-profile loop via ``replan``
-               — adaptively: each category's ``max_batch`` is picked from
-               observed telemetry (occupancy, per-call boundary traffic)
-               under an optional latency ``deadline_s``.
+               — adaptively: each category's ``max_batch`` AND sharded
+               ``n_devices`` are picked from observed telemetry (occupancy,
+               per-call boundary traffic) under an optional latency
+               ``deadline_s``.
   specs      — shared demo design points (``BATCHED_4F``: upgraded
                peripherals + frame latency that only batching amortizes).
 
@@ -47,6 +56,7 @@ Quick start::
 
 from repro.runtime.backends import (
     CATEGORIES,
+    CONV_CAPTURES,
     BackendContext,
     ExecutionBackend,
     HostBackend,
@@ -59,11 +69,13 @@ from repro.runtime.backends import (
 from repro.runtime.executor import OffloadExecutor, OffloadResult
 from repro.runtime.fidelity import FidelityChecker, FidelityReport, enob_error_bound
 from repro.runtime.router import PlanRouter
+from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
 from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
-from repro.runtime.telemetry import BackendStats, RuntimeTelemetry
+from repro.runtime.telemetry import BackendStats, DeviceStats, RuntimeTelemetry
 
 __all__ = [
     "CATEGORIES",
+    "CONV_CAPTURES",
     "BackendContext",
     "ExecutionBackend",
     "HostBackend",
@@ -78,7 +90,11 @@ __all__ = [
     "FidelityReport",
     "enob_error_bound",
     "PlanRouter",
+    "ShardedOpticalBackend",
+    "kernel_halo",
+    "shard_sizes",
     "BackendStats",
+    "DeviceStats",
     "RuntimeTelemetry",
     "BATCHED_4F",
     "CAMERA_ADC",

@@ -80,6 +80,8 @@ __all__ = [
     "HostBackend",
     "OpticalSimBackend",
     "IdealBackend",
+    "conv_range_map",
+    "ideal_step_cost",
     "register_backend",
     "get_backend",
     "available_backends",
@@ -101,26 +103,64 @@ class BackendContext:
     boundary crossings; analog backends thread it into
     ``batched_step_cost`` so the modeled price matches how the invocation
     is actually overlapped (2 = the executor's async double-buffered
-    flush; 1 = strictly serial crossings)."""
+    flush; 1 = strictly serial crossings).
+
+    ``n_devices`` is how many replicated simulated accelerators the sharded
+    backend scatters one invocation across (the executor writes the
+    per-category effective count here before every dispatch — and before
+    ``warm`` — so sharded dispatch shapes are primed consistently);
+    ``shard_mode`` picks between group sharding, frame sharding, and the
+    automatic policy (see ``repro.runtime.sharded``)."""
 
     spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec
     factor_cache: dict[int, tuple[jax.Array, jax.Array]] = \
         dataclasses.field(default_factory=dict)
     mask_cache: dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
     pipeline_depth: int = 2
+    n_devices: int = 1
+    shard_mode: str = "auto"
+    _digest_memo: dict[int, tuple[jax.Array, tuple]] = \
+        dataclasses.field(default_factory=dict)
 
     def factors(self, n: int) -> tuple[jax.Array, jax.Array]:
+        # Computed from host constants, so the cached matrices stay
+        # *uncommitted*: jit moves them to whatever device a (possibly
+        # sharded, committed) operand pins the computation to.
         if n not in self.factor_cache:
             self.factor_cache[n] = dft_matrix_factors(n)
         return self.factor_cache[n]
 
-    def mask(self, kernel: jax.Array) -> jax.Array:
-        # Content-keyed (not id-keyed): object identity can be recycled by
-        # the allocator after a temporary kernel dies, which would serve a
-        # stale mask.  Kernels are small; one host hash per flush group.
+    def content_key(self, kernel: jax.Array) -> tuple:
+        """Content key of an operand: shape, dtype, SHA1 of the bytes.
+
+        Content-keyed (not id-keyed): object identity can be recycled by
+        the allocator after a temporary kernel dies, which would serve a
+        stale cache entry.  Repeat hashing of a long-lived kernel is
+        avoided by an id-keyed memo that HOLDS a reference to the array —
+        a live entry pins the object, so its id cannot be recycled while
+        the memo is valid."""
+        memo = self._digest_memo.get(id(kernel))
+        if memo is not None and memo[0] is kernel:
+            return memo[1]
         arr = np.asarray(kernel)
         key = (arr.shape, str(arr.dtype),
                hashlib.sha1(arr.tobytes()).hexdigest())
+        if len(self._digest_memo) >= 64:  # bounded: kernels are few
+            self._digest_memo.clear()
+        self._digest_memo[id(kernel)] = (kernel, key)
+        return key
+
+    def mask(self, kernel: jax.Array) -> jax.Array:
+        # The key also carries the kernel's device placement: a kernel
+        # committed to one device pins its mask there, and serving that
+        # mask to a stack committed elsewhere would crash the jitted conv
+        # with mixed-device operands.  (Uncommitted kernels — the usual
+        # case, including sharded dispatch — yield an uncommitted mask
+        # that follows whatever device the stack is committed to.)
+        devs = getattr(kernel, "devices", None)
+        dev_key = tuple(sorted(d.id for d in devs())) if callable(devs) \
+            else ()
+        key = self.content_key(kernel) + (dev_key,)
         if key not in self.mask_cache:
             self.mask_cache[key] = fourier_mask_for_kernel(kernel)
         return self.mask_cache[key]
@@ -203,19 +243,27 @@ class HostBackend(ExecutionBackend):
 # --- optical-sim: the conversion boundary, executed and priced ----------------
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
-def _optical_conv_batched(stack: jax.Array, mask: jax.Array, ksum: jax.Array,
-                          params: OpticalSimParams) -> jax.Array:
-    # The DAC's full-scale range is fixed [0, 1] and the SLM cannot encode
-    # negative amplitudes, so the host affine-maps each input onto the
-    # aperture and undoes the map after: conv is linear, and
-    # conv(s*v + lo) = s*conv(v) + lo*sum(kernel) (circular conv of a
-    # constant plane is the kernel sum).  lo/scale are per frame, and
-    # ``optical_conv2d_batched`` keeps the interferometric ADC full-scale
-    # per frame too.
+def conv_range_map(stack: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-frame affine map of arbitrary-range frames onto the SLM's [0, 1]
+    aperture: the DAC's full-scale range is fixed and the SLM cannot encode
+    negative amplitudes.  Conv is linear, so the map undoes exactly:
+    conv(s*v + lo) = s*conv(v) + lo*sum(kernel) (circular conv of a
+    constant plane is the kernel sum).  Shared by the batched conv path and
+    the frame-sharded tiler — the two must use the SAME map (one grid of
+    DAC quantization points) or sharded results drift from unsharded ones.
+    """
     lo = jnp.min(stack, axis=(-2, -1), keepdims=True)
     scale = jnp.maximum(jnp.max(stack, axis=(-2, -1), keepdims=True) - lo,
                         1e-9)
+    return lo, scale
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def _optical_conv_batched(stack: jax.Array, mask: jax.Array, ksum: jax.Array,
+                          params: OpticalSimParams) -> jax.Array:
+    # lo/scale are per frame, and ``optical_conv2d_batched`` keeps the
+    # interferometric ADC full-scale per frame too.
+    lo, scale = conv_range_map(stack)
     v = (stack - lo) / scale
     out = optical_conv2d_batched(v, mask, params, None)
     return out * scale + lo * ksum
@@ -306,6 +354,21 @@ class OpticalSimBackend(ExecutionBackend):
 # --- ideal: the zero-conversion-cost analog bound -----------------------------
 
 
+def ideal_step_cost(spec, category: str, calls: int) -> StepCost:
+    """The zero-conversion analog bound for one invocation: physics only.
+
+    Shared by :class:`IdealBackend` and the sharded tiler's per-device
+    pricing so the Table-1 bound has exactly one definition."""
+    if isinstance(spec, OpticalMVMAcceleratorSpec):
+        analog = calls * spec.optical_pass_s
+    else:
+        caps = CONV_CAPTURES if category == "conv" \
+            else spec.phase_shift_captures
+        analog = ((spec.slm_settle_s + spec.exposure_s) * caps
+                  + spec.time_of_flight_s())
+    return StepCost(0.0, 0.0, 0.0, analog_s=analog)
+
+
 class IdealBackend(ExecutionBackend):
     """Exact digital values, priced as if conversion and interface were free.
 
@@ -319,15 +382,7 @@ class IdealBackend(ExecutionBackend):
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
         outs, _ = _HOST.run(category, xs, ctx, kernel=kernel, weights=weights)
-        spec = ctx.spec
-        if isinstance(spec, OpticalMVMAcceleratorSpec):
-            analog = len(xs) * spec.optical_pass_s
-        else:
-            caps = CONV_CAPTURES if category == "conv" \
-                else spec.phase_shift_captures
-            analog = ((spec.slm_settle_s + spec.exposure_s) * caps
-                      + spec.time_of_flight_s())
-        return outs, StepCost(0.0, 0.0, 0.0, analog_s=analog)
+        return outs, ideal_step_cost(ctx.spec, category, len(xs))
 
 
 _HOST = HostBackend()

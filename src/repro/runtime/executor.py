@@ -53,6 +53,10 @@ from repro.runtime.telemetry import RuntimeTelemetry
 
 __all__ = ["OffloadResult", "OffloadExecutor"]
 
+# Backends whose batches carry quantization error worth shadow-scoring (the
+# sharded backend's default inner is the optical simulator).
+_SHADOWED = ("optical-sim", "sharded")
+
 
 def _block(x: Any) -> None:
     for leaf in jax.tree_util.tree_leaves(x):
@@ -145,6 +149,7 @@ class _Inflight:
     modeled: StepCost | None
     t0: float
     dispatch_s: float  # host time spent staging + dispatching (be.run)
+    device_samples: list[tuple[int, int]] | None = None  # sharded dispatch
 
 
 class OffloadExecutor:
@@ -166,6 +171,13 @@ class OffloadExecutor:
         once.  2 (default) double-buffers the boundary: group k+1 stages
         while group k computes.  1 restores strictly serial
         dispatch-then-block crossings.
+      n_devices: how many replicated simulated accelerators the ``sharded``
+        backend scatters each invocation across.  A global ceiling;
+        per-category counts (``set_n_devices``) let the router adapt the
+        device fan-out per category, the same way ``set_max_batch`` adapts
+        coalescing depth.
+      shard_mode: the sharded backend's split policy (``auto`` / ``group``
+        / ``frame`` — see ``repro.runtime.sharded``).
     """
 
     def __init__(self,
@@ -176,18 +188,27 @@ class OffloadExecutor:
                  telemetry: RuntimeTelemetry | None = None,
                  fidelity: FidelityChecker | None = None,
                  max_batch: int = 32,
-                 pipeline_depth: int = 2) -> None:
+                 pipeline_depth: int = 2,
+                 n_devices: int = 1,
+                 shard_mode: str = "auto") -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1")
-        self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth)
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if shard_mode not in ("auto", "group", "frame"):
+            raise ValueError("shard_mode must be 'auto', 'group' or 'frame'")
+        self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth,
+                                  n_devices=n_devices, shard_mode=shard_mode)
         self.default_backend = default_backend
         self.telemetry = telemetry or RuntimeTelemetry()
         self.fidelity = fidelity
         self.max_batch = max_batch
         self.pipeline_depth = pipeline_depth
+        self.n_devices = n_devices
         self._category_max_batch: dict[str, int] = {}
+        self._category_n_devices: dict[str, int] = {}
         self._queue: list[_Pending] = []
         self._inflight: collections.deque[_Inflight] = collections.deque()
         self._last_retire_end = 0.0
@@ -212,6 +233,23 @@ class OffloadExecutor:
 
     def category_max_batches(self) -> Mapping[str, int]:
         return dict(self._category_max_batch)
+
+    # -- per-category device fan-out -------------------------------------------
+    def n_devices_for(self, category: str) -> int:
+        """Effective sharded device count for ``category`` (global cap
+        applies — the fleet has only ``n_devices`` accelerators)."""
+        return min(self._category_n_devices.get(category, self.n_devices),
+                   self.n_devices)
+
+    def set_n_devices(self, category: str, n: int) -> None:
+        """Set a per-category sharded device count (the adaptive hook
+        ``PlanRouter.replan`` drives alongside ``set_max_batch``)."""
+        if n < 1:
+            raise ValueError("n_devices must be >= 1")
+        self._category_n_devices[category] = n
+
+    def category_n_devices(self) -> Mapping[str, int]:
+        return dict(self._category_n_devices)
 
     def _backend(self, name: str) -> ExecutionBackend:
         if name not in self._backends:
@@ -266,6 +304,14 @@ class OffloadExecutor:
         is a shape of its own and still compiles on first encounter — call
         ``warm`` again with ``batch=tail`` when the tail size is known and
         the measurement window cannot tolerate it.
+
+        Sharded dispatch shapes are primed too: the per-category device
+        count is written into the context exactly as ``flush`` does it, so
+        a sharded backend warms the same per-device shard stacks (and conv
+        halo tiles) the first real sharded flush will dispatch, instead of
+        whatever stale device count the context last held — without this,
+        the first sharded flush is billed shard-shape compile time in
+        telemetry.
         """
         name = self._validate(category, backend, kernel, weights)
         be = self._backend(name)
@@ -273,6 +319,7 @@ class OffloadExecutor:
             batch = self.max_batch_for(category)
         if batch < 1:
             raise ValueError("batch must be >= 1")
+        self.ctx.n_devices = self.n_devices_for(category)
         for b in sorted({1, batch}):
             outs, _ = be.run(category, [x] * b, self.ctx,
                              kernel=kernel, weights=weights)
@@ -348,10 +395,14 @@ class OffloadExecutor:
         head = chunk[0]
         be = self._backend(head.backend)
         xs = [p.x for p in chunk]
+        # per-category device fan-out, written the same way warm() writes it
+        self.ctx.n_devices = self.n_devices_for(head.category)
         t0 = time.perf_counter()
         outs, modeled = be.run(head.category, xs, self.ctx,
                                kernel=head.kernel, weights=head.weights)
         dispatch_s = time.perf_counter() - t0
+        take = getattr(be, "take_device_samples", None)
+        device_samples = take() if take is not None else None
         batch = len(chunk)
         # host-like backends have no modeled price: provisional cost is the
         # staging+dispatch wall share (refined to the full measured wall at
@@ -363,8 +414,9 @@ class OffloadExecutor:
             # async fill: the value is dispatched, not yet materialized
             p.result._fill(out, share, be.name, batch, None)
         inflight = _Inflight(chunk=chunk, be=be, outs=outs,
-                             modeled=modeled, t0=t0, dispatch_s=dispatch_s)
-        if self.fidelity is not None and be.name == "optical-sim":
+                             modeled=modeled, t0=t0, dispatch_s=dispatch_s,
+                             device_samples=device_samples)
+        if self.fidelity is not None and be.name in _SHADOWED:
             # shadow scoring needs concrete values: validation mode is
             # synchronous by construction
             self._retire(inflight)
@@ -393,9 +445,9 @@ class OffloadExecutor:
         self.telemetry.record(
             f.chunk[0].category, f.be.name, calls=batch,
             samples_in=samples_in, samples_out=samples_out, wall_s=wall,
-            modeled=f.modeled)
+            modeled=f.modeled, per_device=f.device_samples)
         report = None
-        if self.fidelity is not None and f.be.name == "optical-sim":
+        if self.fidelity is not None and f.be.name in _SHADOWED:
             t1 = time.perf_counter()
             refs, _ = self._backend("host").run(
                 f.chunk[0].category, [p.x for p in f.chunk], self.ctx,

@@ -44,9 +44,12 @@ class PlanRouter:
         # lowered) ceiling of its own, so relaxing a deadline can raise
         # the ceiling back up to the operator's bound.  A ceiling is
         # recognized as operator-set when it differs from what this router
-        # last wrote.
+        # last wrote.  The same bookkeeping covers the sharded device
+        # fan-out (``set_n_devices``).
         self._operator_caps: dict[str, int] = {}
         self._router_set: dict[str, int] = {}
+        self._operator_dev_caps: dict[str, int] = {}
+        self._router_set_dev: dict[str, int] = {}
         if plan is not None:
             self.apply(plan)
 
@@ -87,30 +90,41 @@ class PlanRouter:
     def pending(self) -> int:
         return self.executor.pending
 
-    # -- adaptive batching -----------------------------------------------------
-    def choose_max_batch(self, deadline_s: float | None = None) -> dict[str, int]:
-        """Pick a per-category coalescing ceiling from measured telemetry.
+    # -- adaptive batching + device fan-out ------------------------------------
+    def choose_sharding(self, deadline_s: float | None = None,
+                        ) -> dict[str, tuple[int, int]]:
+        """Pick per-category ``(max_batch, n_devices)`` from measured
+        telemetry.
 
         The amortization side of the trade wants the deepest batch the
         executor allows (every coalesced call shares the handshake, settle,
         and lane-ceil residue); the latency side caps it: with a
         ``deadline_s``, the modeled batched invocation — priced from the
         category's *observed* per-call boundary traffic at the executor's
-        pipeline depth — must still finish within the deadline, so the
-        depth is halved until it fits.  Categories with no recorded
-        traffic are left at the executor's global ceiling.
+        pipeline depth AND its sharded device fan-out (max-over-devices
+        plus sync) — must still finish within the deadline, so the depth is
+        halved until it fits.  Categories with no recorded traffic are left
+        at the executor's global ceilings.
 
-        A per-category ceiling the *operator* set directly
-        (``executor.set_max_batch``) is an upper bound the adaptive choice
-        never exceeds; ceilings this router itself installed are re-derived
-        from scratch on each call (so relaxing a deadline raises them
-        again, up to the operator's bound where one exists).
+        The device count rides the batch: group sharding can never use more
+        devices than the group has items, so ``n = min(device cap, k)`` —
+        which makes BOTH chosen values monotone non-increasing as the
+        deadline tightens (the halving sequence is fixed, so a smaller
+        deadline only ever stops it later).
+
+        Per-category ceilings the *operator* set directly
+        (``executor.set_max_batch`` / ``executor.set_n_devices``) are upper
+        bounds the adaptive choice never exceeds; ceilings this router
+        itself installed are re-derived from scratch on each call (so
+        relaxing a deadline raises them again, up to the operator's bound
+        where one exists).
         """
         ex, telemetry = self.executor, self.executor.telemetry
         spec = ex.spec
-        chosen: dict[str, int] = {}
+        chosen: dict[str, tuple[int, int]] = {}
         for cat in telemetry.categories():
             k = min(ex.max_batch, self._operator_bound(cat))
+            n_cap = min(ex.n_devices, self._operator_device_bound(cat))
             n_in, n_out = telemetry.samples_per_call(cat)
             if (deadline_s is not None and n_in > 0
                     and hasattr(spec, "batched_step_cost")):
@@ -123,10 +137,18 @@ class PlanRouter:
                         spec, phase_shift_captures=CONV_CAPTURES)
                 while k > 1 and pricing_spec.batched_step_cost(
                         n_in, n_out or None, batch=k,
-                        pipeline_depth=ex.pipeline_depth).total_s > deadline_s:
+                        pipeline_depth=ex.pipeline_depth,
+                        n_devices=max(1, min(n_cap, k)),
+                        ).total_s > deadline_s:
                     k //= 2
-            chosen[cat] = max(k, 1)
+            chosen[cat] = (max(k, 1), max(1, min(n_cap, k)))
         return chosen
+
+    def choose_max_batch(self, deadline_s: float | None = None) -> dict[str, int]:
+        """The batch half of :meth:`choose_sharding` (kept for callers that
+        predate sharded offload)."""
+        return {cat: k for cat, (k, _n)
+                in self.choose_sharding(deadline_s).items()}
 
     def _operator_bound(self, cat: str) -> int:
         """Upper bound the operator imposed on ``cat``'s ceiling (the
@@ -137,6 +159,13 @@ class PlanRouter:
         if current is not None and current != self._router_set.get(cat):
             self._operator_caps[cat] = current
         return self._operator_caps.get(cat, self.executor.max_batch)
+
+    def _operator_device_bound(self, cat: str) -> int:
+        """Like :meth:`_operator_bound`, for the sharded device fan-out."""
+        current = self.executor.category_n_devices().get(cat)
+        if current is not None and current != self._router_set_dev.get(cat):
+            self._operator_dev_caps[cat] = current
+        return self._operator_dev_caps.get(cat, self.executor.n_devices)
 
     # -- the loop-closer -------------------------------------------------------
     def replan(self, spec=None,
@@ -154,11 +183,12 @@ class PlanRouter:
         to price a hypothetical batching depth (explicit values disable
         adaptation).
 
-        Adaptive batching: when ``max_batch`` is omitted, the router also
-        *sets* the executor's per-category coalescing ceilings to
-        :meth:`choose_max_batch`'s picks (observed traffic + optional
-        ``deadline_s`` latency bound) as part of ``apply`` — the cap stops
-        being a fixed constructor argument and follows the workload.
+        Adaptive batching + sharding: when ``max_batch`` is omitted, the
+        router also *sets* the executor's per-category coalescing ceilings
+        AND sharded device fan-outs to :meth:`choose_sharding`'s picks
+        (observed traffic + optional ``deadline_s`` latency bound) as part
+        of ``apply`` — the caps stop being fixed constructor arguments and
+        follow the workload.
 
         ``extra_profiles`` lets callers append workload the runtime never
         saw (e.g. a known non-offloadable phase); ``apply=False`` prices
@@ -167,14 +197,14 @@ class PlanRouter:
         telemetry = self.executor.telemetry
         profiles = list(telemetry.profiles())
         profiles.extend(extra_profiles)
-        chosen: dict[str, int] | None = None
+        chosen: dict[str, tuple[int, int]] | None = None
         if max_batch is None:
-            chosen = self.choose_max_batch(deadline_s)
+            chosen = self.choose_sharding(deadline_s)
             # price at what the traffic achieved, bounded by the adaptive
             # ceiling: one category's deep batches must not credit another
             # category's serial traffic with amortization
             batch: int | dict[str, int] = {
-                cat: min(chosen[cat], telemetry.observed_occupancy(cat))
+                cat: min(chosen[cat][0], telemetry.observed_occupancy(cat))
                 for cat in telemetry.categories()}
         else:
             batch = max_batch
@@ -183,9 +213,11 @@ class PlanRouter:
         if apply:
             self.apply(plan)
             if chosen is not None:
-                for cat, k in chosen.items():
+                for cat, (k, n) in chosen.items():
                     self.executor.set_max_batch(cat, k)
                     self._router_set[cat] = k
+                    self.executor.set_n_devices(cat, n)
+                    self._router_set_dev[cat] = n
         return plan
 
     def summary(self) -> str:

@@ -1,0 +1,384 @@
+"""Multi-device sharded offload: scatter one invocation across accelerators.
+
+Photonic systems scale by *replicating apertures*, not by growing one (a
+bigger SLM needs a bigger lens, a longer path, and a denser camera; a second
+4f engine needs none of that).  This module makes that scaling mode
+executable: :class:`ShardedOpticalBackend` wraps any registered inner
+backend (``host`` / ``optical-sim`` / ``ideal``) and splits each batched
+invocation across ``ctx.n_devices`` simulated accelerators, two ways:
+
+  group sharding   the stacked ``(K, H, W)`` flush group scatters across
+                   devices — device d carries a contiguous slice of the
+                   batch through its OWN converters, so every device pays
+                   its own DAC/ADC boundary crossing (per-invocation fixed
+                   costs do NOT amortize across devices) but the crossings
+                   run concurrently: the modeled wall is max-over-devices
+                   plus a per-device sync epsilon
+                   (``batched_step_cost(n_devices=...)``).
+  frame sharding   one large frame tiles onto multiple apertures.  ``conv``
+                   uses overlap-save: each device receives its row block
+                   plus a circular halo covering the kernel's support, runs
+                   the 4f pipeline on the extended tile, and discards the
+                   halo rows — exact up to per-device converter
+                   quantization (each aperture's detector auto-exposes its
+                   own tile, precisely the "every device pays its own
+                   boundary" story).  ``matmul`` row-splits the activation
+                   block (no halo needed — rows are independent).  ``fft``
+                   never frame-shards: the 2-D DFT is global, so tiling
+                   would need a cross-device transpose between the two 1-D
+                   stages — it group-shards instead.
+
+Dispatch reuses the ``distributed/`` mesh plumbing:
+:func:`repro.distributed.sharding.shard_devices` picks the active context
+mesh's devices (or ``jax.devices()``) and each shard is ``device_put`` onto
+its own device, so JAX's async dispatch runs the shards concurrently —
+``shard_map``-style scatter without requiring the inner backends to be
+traceable under a mesh.  With fewer real devices than shards (the CPU test
+environment: one device) the same shards dispatch sequentially with
+identical numerics — the off-mesh fallback the equivalence property tests
+lock down: sharded == single-device batched == looped per-frame, on every
+backend.
+
+Per-device boundary traffic is surfaced to the executor via
+:meth:`ShardedOpticalBackend.take_device_samples` and aggregated by
+:class:`~repro.runtime.telemetry.RuntimeTelemetry`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.accelerator import StepCost
+from repro.core.optical import optical_conv2d_batched
+from repro.distributed.sharding import shard_devices
+from repro.runtime.backends import (
+    CONV_CAPTURES,
+    BackendContext,
+    ExecutionBackend,
+    _host_circular_conv,
+    _host_matmul,
+    _optical_matmul_batched,
+    conv_range_map,
+    get_backend,
+    ideal_step_cost,
+    register_backend,
+)
+
+__all__ = ["ShardedOpticalBackend", "shard_sizes", "kernel_halo"]
+
+# Inners frame sharding knows how to drive (group sharding takes any inner).
+_FRAME_INNERS = ("host", "optical-sim", "ideal")
+
+
+def shard_sizes(total: int, n: int) -> list[int]:
+    """Balanced contiguous shard sizes over ``n`` devices.
+
+    The first ``total % n`` shards carry one extra item, so ``max(sizes) ==
+    ceil(total / n)`` — exactly the largest-shard crossing the cost model's
+    max-over-devices pricing charges.  Never returns more shards than
+    items (``n`` is clamped), so a 3-deep group on 4 devices uses 3.
+    """
+    n = max(1, min(n, total))
+    base, rem = divmod(total, n)
+    return [base + (1 if i < rem else 0) for i in range(n)]
+
+
+def kernel_halo(kernel: jax.Array) -> tuple[int, int]:
+    """(halo_top, halo_bottom) rows a conv tile needs for overlap-save.
+
+    Circular conv: ``out[i] = sum_r k[r] * a[(i - r) mod H]``.  A kernel row
+    ``r`` is read as the circular offset ``r`` (if ``r <= H/2``) or ``r - H``
+    (wrap-around support, e.g. the bottom rows of a centered kernel):
+    positive offsets pull input rows *above* the tile, negative ones below.
+    """
+    k = np.asarray(kernel)
+    rows = np.nonzero(np.any(k != 0, axis=-1))[0]
+    if rows.size == 0:
+        return 0, 0
+    h = k.shape[-2]
+    off = np.where(rows <= h // 2, rows, rows - h)
+    return int(max(off.max(), 0)), int(max(-off.min(), 0))
+
+
+def _gather_blocks(blocks: list[jax.Array], devices) -> list[jax.Array]:
+    """Bring per-device output tiles back onto one device before they are
+    concatenated: a jitted concatenate over operands committed to distinct
+    devices is an error, and the reassembled frame is host-facing anyway."""
+    if devices is None:
+        return blocks
+    home = jax.devices()[0]
+    return [jax.device_put(b, home) for b in blocks]
+
+
+def _fold_kernel(kernel: jax.Array, ext: int) -> jax.Array:
+    """Re-express ``kernel``'s circular row support on an ``ext``-row tile.
+
+    Each support offset lands at ``offset % ext``; offsets are distinct mod
+    ``ext`` because the tile always spans ``halo_top + halo_bottom + rows``
+    with ``rows >= 1``."""
+    k = np.asarray(kernel)
+    h = k.shape[-2]
+    out = np.zeros((ext,) + k.shape[-1:], k.dtype)
+    for r in np.nonzero(np.any(k != 0, axis=-1))[0]:
+        off = int(r) if r <= h // 2 else int(r) - h
+        out[off % ext] = k[r]
+    return jnp.asarray(out)
+
+
+class ShardedOpticalBackend(ExecutionBackend):
+    """Scatter each batched invocation across ``ctx.n_devices`` accelerators.
+
+    Wraps a registered inner backend; with ``ctx.n_devices == 1`` it is a
+    transparent pass-through.  ``ctx.shard_mode`` selects the split:
+
+      ``"auto"``   group-shard whenever whole frames can feed the fleet —
+                   including shallow groups, which simply occupy fewer
+                   devices (tight numerics, zero halo traffic); frame-shard
+                   only when a frame is genuinely too big for one aperture
+                   (``usable_pixels``) or MVM core.  ``fft`` always
+                   group-shards.
+      ``"group"``  always scatter the batch.
+      ``"frame"``  always tile frames (conv: overlap-save halos; matmul:
+                   row split; fft falls back to group).
+    """
+
+    def __init__(self, inner: str = "optical-sim") -> None:
+        self.inner_name = inner
+        self.name = "sharded" if inner == "optical-sim" else f"sharded-{inner}"
+        self._inner: ExecutionBackend | None = None
+        self._last_device_samples: list[tuple[int, int]] | None = None
+        self._fold_cache: dict[tuple, jax.Array] = {}
+
+    def _folded(self, kernel: jax.Array, ext: int,
+                ctx: BackendContext) -> jax.Array:
+        """Cached :func:`_fold_kernel`: one refold per (kernel content,
+        tile height) instead of one per device per flush."""
+        key = ctx.content_key(kernel) + (ext,)
+        if key not in self._fold_cache:
+            if len(self._fold_cache) >= 64:
+                self._fold_cache.clear()
+            self._fold_cache[key] = _fold_kernel(kernel, ext)
+        return self._fold_cache[key]
+
+    @property
+    def inner(self) -> ExecutionBackend:
+        if self._inner is None:
+            self._inner = get_backend(self.inner_name)
+        return self._inner
+
+    def supports(self, category: str, ctx: BackendContext) -> bool:
+        return self.inner.supports(category, ctx)
+
+    def take_device_samples(self) -> list[tuple[int, int]] | None:
+        """Per-device (samples_in, samples_out) of the last ``run`` — popped
+        by the executor right after dispatch and recorded into telemetry at
+        retire time."""
+        samples, self._last_device_samples = self._last_device_samples, None
+        return samples
+
+    # -- dispatch --------------------------------------------------------------
+    def run(self, category, xs, ctx, *, kernel=None, weights=None):
+        mode = self._resolve_mode(category, xs, ctx)
+        if mode == "none":
+            outs, cost = self.inner.run(category, xs, ctx, kernel=kernel,
+                                        weights=weights)
+            self._last_device_samples = [
+                (sum(int(x.size) for x in xs), sum(int(o.size) for o in outs))]
+            return outs, cost
+        if mode == "group":
+            return self._run_group(category, xs, ctx, kernel, weights)
+        if self.inner_name not in _FRAME_INNERS:
+            raise ValueError(
+                f"frame sharding supports inners {_FRAME_INNERS}, "
+                f"not {self.inner_name!r}")
+        if category == "conv":
+            return self._frame_conv(xs, ctx, kernel)
+        if category == "matmul":
+            return self._frame_matmul(xs, ctx, weights)
+        raise ValueError(f"frame sharding does not support {category!r}")
+
+    def _resolve_mode(self, category, xs, ctx) -> str:
+        n = max(1, int(ctx.n_devices))
+        if n == 1:
+            return "none"
+        if category == "fft":
+            # the 2-D DFT is global: tiling one frame would need a
+            # cross-device transpose between the row and column stages
+            return "group"
+        if ctx.shard_mode == "auto":
+            # Group sharding whenever whole frames can feed every device
+            # (tight numerics, zero halo traffic).  Tiling is reserved for
+            # frames genuinely too big for one aperture/core — a shallow
+            # group of small frames group-shards over fewer devices rather
+            # than trading exactness for fan-out mid-flush.
+            if len(xs) >= n or not self._frame_worthwhile(category, xs, ctx):
+                return "group"
+            return "frame"
+        return ctx.shard_mode
+
+    @staticmethod
+    def _frame_worthwhile(category, xs, ctx) -> bool:
+        """True when one frame overflows a single device's aperture (4f) or
+        optical core (MVM), so tiling it is the only way to stop a lone
+        device paying multiple serial settles/handshakes."""
+        spec = ctx.spec
+        if category == "conv":
+            cap = getattr(spec, "usable_pixels", 0)
+        else:
+            cap = spec.rows * spec.cols if hasattr(spec, "rows") else 0
+        return cap > 0 and int(xs[0].size) > cap
+
+    # -- (a) group sharding: scatter the stacked flush group -------------------
+    def _run_group(self, category, xs, ctx, kernel, weights):
+        sizes = shard_sizes(len(xs), ctx.n_devices)
+        devices = shard_devices(len(sizes))
+        outs: list[jax.Array] = []
+        costs: list[StepCost | None] = []
+        samples: list[tuple[int, int]] = []
+        start = 0
+        for d, size in enumerate(sizes):
+            shard = xs[start:start + size]
+            start += size
+            if devices is not None:
+                # only the frames are committed per device: the kernel /
+                # weights (and the masks derived from them) stay
+                # uncommitted, so jit moves them to whichever device each
+                # shard's stack pins the computation to — one cached mask
+                # and one content hash serve the whole fleet
+                shard = [jax.device_put(x, devices[d]) for x in shard]
+            o, c = self.inner.run(category, shard, ctx, kernel=kernel,
+                                  weights=weights)
+            outs.extend(o)
+            costs.append(c)
+            samples.append((sum(int(x.size) for x in shard),
+                            sum(int(v.size) for v in o)))
+        self._last_device_samples = samples
+        return outs, self._combine(costs, len(sizes), ctx)
+
+    # -- (b) frame sharding: tile frames onto multiple apertures ---------------
+    def _frame_conv(self, xs, ctx, kernel):
+        h, w = int(xs[0].shape[-2]), int(xs[0].shape[-1])
+        sizes = shard_sizes(h, ctx.n_devices)
+        if len(sizes) == 1:
+            return self.run("conv", xs, dataclasses.replace(ctx, n_devices=1),
+                            kernel=kernel)
+        halo_t, halo_b = kernel_halo(kernel)
+        stack = jnp.stack(list(xs))
+        optical = self.inner_name == "optical-sim"
+        if optical:
+            # one affine range map for the WHOLE frame (the host knows the
+            # full frame before scattering tiles), so the DAC quantization
+            # grid is identical to the unsharded invocation; only the
+            # per-tile detector auto-exposure differs across devices
+            lo, scale = conv_range_map(stack)
+            v = (stack - lo) / scale
+        else:
+            v = stack
+        devices = shard_devices(len(sizes))
+        blocks, costs, samples = [], [], []
+        r0 = 0
+        for d, rows in enumerate(sizes):
+            ext = rows + halo_t + halo_b
+            idx = jnp.arange(r0 - halo_t, r0 + rows + halo_b) % h
+            sub = jnp.take(v, idx, axis=1)
+            k_sub = self._folded(kernel, ext, ctx)
+            if devices is not None:
+                # the tile is committed; k_sub / its mask stay uncommitted
+                # and follow it (see _run_group)
+                sub = jax.device_put(sub, devices[d])
+            if optical:
+                out_sub = optical_conv2d_batched(sub, ctx.mask(k_sub),
+                                                 ctx.sim_params, None)
+            else:
+                out_sub = _host_circular_conv(sub, k_sub)
+            blocks.append(out_sub[:, halo_t:halo_t + rows, :])
+            samples.append((int(sub.size), len(xs) * rows * w))
+            costs.append(self._frame_conv_cost(ctx, ext * w, rows * w,
+                                               len(xs)))
+            r0 += rows
+        out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
+        if optical:
+            out = out * scale + lo * jnp.sum(kernel)
+        self._last_device_samples = samples
+        return list(out), self._combine(costs, len(sizes), ctx)
+
+    def _frame_matmul(self, xs, ctx, weights):
+        m = int(xs[0].shape[0])
+        kdim = int(xs[0].shape[1])
+        nout = int(weights.shape[-1])
+        sizes = shard_sizes(m, ctx.n_devices)
+        if len(sizes) == 1:
+            return self.run("matmul", xs,
+                            dataclasses.replace(ctx, n_devices=1),
+                            weights=weights)
+        stack = jnp.stack(list(xs))
+        devices = shard_devices(len(sizes))
+        blocks, costs, samples = [], [], []
+        r0 = 0
+        for d, rows in enumerate(sizes):
+            sub = stack[:, r0:r0 + rows, :]
+            if devices is not None:
+                # activations committed per device; uncommitted weights
+                # follow them under jit (see _run_group)
+                sub = jax.device_put(sub, devices[d])
+            if self.inner_name == "optical-sim":
+                out_sub = _optical_matmul_batched(
+                    sub, weights, dac_bits=ctx.spec.dac.bits,
+                    adc_bits=ctx.spec.adc.bits)
+            else:
+                out_sub = _host_matmul(sub, weights)
+            blocks.append(out_sub)
+            samples.append((int(sub.size), int(out_sub.size)))
+            costs.append(self._frame_matmul_cost(ctx, len(xs), rows, kdim,
+                                                 nout))
+            r0 += rows
+        out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
+        self._last_device_samples = samples
+        return list(out), self._combine(costs, len(sizes), ctx)
+
+    # -- pricing ---------------------------------------------------------------
+    def _combine(self, costs, n_eff: int, ctx) -> StepCost | None:
+        """Max-over-devices: the invocation retires when the slowest
+        (largest) shard's boundary crossing does; the sync barrier scales
+        with the participant count.  Host-like inners price by measured
+        wall (None propagates); the ideal bound stays sync-free — a
+        zero-boundary accelerator has nothing to synchronize through."""
+        if any(c is None for c in costs):
+            return None
+        worst = max(costs, key=lambda c: c.total_s)
+        sync = getattr(ctx.spec, "device_sync_s", 0.0)
+        if self.inner_name == "ideal" or sync <= 0.0:
+            return worst
+        return dataclasses.replace(
+            worst, interface_s=worst.interface_s + n_eff * sync)
+
+    def _frame_conv_cost(self, ctx, n_in: int, n_out: int,
+                         batch: int) -> StepCost | None:
+        if self.inner_name == "host":
+            return None
+        spec = ctx.spec
+        if self.inner_name == "ideal":
+            return ideal_step_cost(spec, "conv", batch)
+        spec4 = dataclasses.replace(spec, phase_shift_captures=CONV_CAPTURES)
+        return spec4.batched_step_cost(n_in, n_out, batch=batch,
+                                       pipeline_depth=ctx.pipeline_depth)
+
+    def _frame_matmul_cost(self, ctx, batch: int, rows: int, kdim: int,
+                           nout: int) -> StepCost | None:
+        if self.inner_name == "host":
+            return None
+        spec = ctx.spec
+        if self.inner_name == "ideal":
+            return ideal_step_cost(spec, "matmul", batch)
+        return dataclasses.replace(
+            spec.matmul_cost(batch * rows, kdim, nout),
+            interface_s=spec.interface_latency_s)
+
+
+register_backend("sharded", ShardedOpticalBackend)
+register_backend("sharded-host", lambda: ShardedOpticalBackend(inner="host"))
+register_backend("sharded-ideal", lambda: ShardedOpticalBackend(inner="ideal"))

@@ -40,4 +40,9 @@ BATCHED_4F: OpticalFourierAcceleratorSpec = dataclasses.replace(
     interface_latency_s=16.7e-3,
     dac=SLM_DAC, adc=CAMERA_ADC, dac_lanes=48, adc_lanes=48,
     slm_interface_hz=1.0e9, camera_interface_hz=1.0e9,
-    slm_settle_s=1.0e-4, exposure_s=5.0e-5)
+    slm_settle_s=1.0e-4, exposure_s=5.0e-5,
+    # multi-aperture (sharded) execution: a host-side barrier of ~10 us per
+    # participating device — small next to the frame-sync latency, but it
+    # keeps max-over-devices pricing honest (free sync would make infinite
+    # fan-out look free)
+    device_sync_s=1.0e-5)

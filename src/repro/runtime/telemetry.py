@@ -27,14 +27,16 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+from typing import Sequence
 
 from repro.core.accelerator import StepCost
 from repro.core.planner import CategoryProfile
 
-__all__ = ["BackendStats", "RuntimeTelemetry"]
+__all__ = ["BackendStats", "DeviceStats", "RuntimeTelemetry"]
 
-# Backends whose measured wall time is honest *host* time for planning.
-_HOST_LIKE = ("host", "ideal")
+# Backends whose measured wall time is honest *host* time for planning
+# (sharded-over-host still executes digitally, scattered or not).
+_HOST_LIKE = ("host", "ideal", "sharded-host", "sharded-ideal")
 
 
 @dataclasses.dataclass
@@ -59,12 +61,24 @@ class BackendStats:
             self.modeled = self.modeled + modeled
 
 
+@dataclasses.dataclass
+class DeviceStats:
+    """Boundary traffic one simulated device absorbed under sharded offload."""
+
+    invocations: int = 0      # sharded invocations this device took part in
+    samples_in: int = 0       # scalars through THIS device's DAC
+    samples_out: int = 0      # scalars back through THIS device's ADC
+
+
 class RuntimeTelemetry:
     """Records executor traffic and emits measured ``CategoryProfile``s."""
 
     def __init__(self) -> None:
         self.stats: dict[tuple[str, str], BackendStats] = \
             collections.defaultdict(BackendStats)
+        # (category, backend) -> device index -> per-device boundary traffic
+        self.device_stats: dict[tuple[str, str], dict[int, DeviceStats]] = \
+            collections.defaultdict(dict)
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -87,10 +101,18 @@ class RuntimeTelemetry:
     # -- recording (called by the executor) ----------------------------------
     def record(self, category: str, backend: str, *, calls: int,
                samples_in: int, samples_out: int, wall_s: float,
-               modeled: StepCost | None = None) -> None:
+               modeled: StepCost | None = None,
+               per_device: Sequence[tuple[int, int]] | None = None) -> None:
         self.stats[(category, backend)].add(
             calls=calls, samples_in=samples_in, samples_out=samples_out,
             wall_s=wall_s, modeled=modeled)
+        if per_device:
+            devs = self.device_stats[(category, backend)]
+            for i, (s_in, s_out) in enumerate(per_device):
+                st = devs.setdefault(i, DeviceStats())
+                st.invocations += 1
+                st.samples_in += int(s_in)
+                st.samples_out += int(s_out)
         if self._t0 is not None:  # only in-window traffic offsets 'other'
             self._in_window_s += wall_s
 
@@ -156,6 +178,30 @@ class RuntimeTelemetry:
             return (0, 0)
         return (s_in // calls, s_out // calls)
 
+    def device_samples(self, category: str) -> dict[int, tuple[int, int]]:
+        """Per-device aggregated boundary traffic for ``category``:
+        ``{device_index: (samples_in, samples_out)}`` summed across
+        backends.  Empty when the category never ran sharded."""
+        out: dict[int, list[int]] = {}
+        for (cat, _backend), devs in self.device_stats.items():
+            if cat != category:
+                continue
+            for i, st in devs.items():
+                acc = out.setdefault(i, [0, 0])
+                acc[0] += st.samples_in
+                acc[1] += st.samples_out
+        return {i: (s[0], s[1]) for i, s in sorted(out.items())}
+
+    def devices_observed(self, category: str | None = None) -> int:
+        """Widest device fan-out any recorded invocation used (1 when no
+        sharded traffic was recorded)."""
+        widest = 1
+        for (cat, _backend), devs in self.device_stats.items():
+            if category is not None and cat != category:
+                continue
+            widest = max(widest, len(devs))
+        return widest
+
     def observed_occupancy(self, category: str | None = None) -> int:
         """Average calls coalesced per invocation in the observed traffic,
         per category (or globally when ``category`` is None).
@@ -202,11 +248,19 @@ class RuntimeTelemetry:
             mine.samples_out += st.samples_out
             mine.wall_s += st.wall_s
             mine.modeled = mine.modeled + st.modeled
+        for key, devs in other.device_stats.items():
+            mine_devs = self.device_stats[key]
+            for i, st in devs.items():
+                acc = mine_devs.setdefault(i, DeviceStats())
+                acc.invocations += st.invocations
+                acc.samples_in += st.samples_in
+                acc.samples_out += st.samples_out
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
     def reset(self) -> None:
         self.stats.clear()
+        self.device_stats.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0
@@ -220,6 +274,12 @@ class RuntimeTelemetry:
                 f"out={st.samples_out} wall={st.wall_s:.4g}s "
                 f"modeled={st.modeled.total_s:.4g}s "
                 f"(conv {st.modeled.conversion_s:.4g}s)")
+            devs = self.device_stats.get((cat, backend))
+            if devs:
+                parts = [f"d{i}: in={d.samples_in} out={d.samples_out} "
+                         f"x{d.invocations}" for i, d in sorted(devs.items())]
+                rows.append(f"           devices[{len(devs)}] "
+                            + "; ".join(parts))
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "
                         f"recorded={self.recorded_s():.4g}s")

@@ -11,6 +11,19 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 
+try:  # property-test effort profiles; the nightly CI job selects "nightly"
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "default", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "nightly", max_examples=200, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:  # tier-1 runs fixed-example fallbacks instead
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

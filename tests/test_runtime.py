@@ -264,6 +264,71 @@ def test_flush_async_wait_and_done():
     assert hs2[0].done()
 
 
+def test_flush_async_empty_flush():
+    """Flushing an empty queue is a no-op: no handles, no dispatches, no
+    telemetry — and it must not disturb invocations already in flight."""
+    ex = OffloadExecutor(LANED_4F, max_batch=4, pipeline_depth=2)
+    assert ex.flush_async() == [] and ex.flush() == []
+    assert ex.in_flight == 0 and not ex.telemetry.stats
+    hs = [ex.submit("fft", im) for im in _imgs(2)]
+    ex.flush_async()
+    inflight_before = ex.in_flight
+    assert ex.flush_async() == []           # empty: in-flight untouched
+    assert ex.in_flight == inflight_before
+    ex.drain()
+    assert all(h.done() for h in hs)
+
+
+def test_drain_called_twice_is_idempotent():
+    ex = OffloadExecutor(LANED_4F, max_batch=2, pipeline_depth=2)
+    [ex.submit("fft", im) for im in _imgs(4)]
+    ex.flush_async()
+    ex.drain()
+    st = ex.telemetry.stats[("fft", "optical-sim")]
+    calls, invocations = st.calls, st.invocations
+    ex.drain()                               # nothing left: pure no-op
+    assert ex.in_flight == 0
+    assert st.calls == calls and st.invocations == invocations
+
+
+def test_wait_on_already_retired_result():
+    """wait() on a result whose invocation already retired must be a
+    cheap no-op: no re-blocking of the pipeline, no double telemetry."""
+    ex = OffloadExecutor(LANED_4F, max_batch=4, pipeline_depth=2)
+    hs = [ex.submit("fft", im) for im in _imgs(4)]
+    ex.flush()                               # everything retired
+    st = ex.telemetry.stats[("fft", "optical-sim")]
+    recorded = (st.calls, st.invocations, st.wall_s)
+    for h in hs:
+        assert h.wait() is h and h.done()    # idempotent, still done
+        assert h.wait().value is h.value
+    assert (st.calls, st.invocations, st.wall_s) == recorded
+
+
+def test_interleaved_submit_during_inflight_pipeline():
+    """Submitting while earlier invocations are still in flight must not
+    lose, reorder, or double-retire anything."""
+    imgs = _imgs(6)
+    ex = OffloadExecutor(LANED_4F, max_batch=2, pipeline_depth=2)
+    first = [ex.submit("fft", im) for im in imgs[:4]]
+    ex.flush_async()                         # 2 invocations, <= 2 in flight
+    assert ex.in_flight == 2
+    # interleave: new submits while the pipeline is full
+    second = [ex.submit("fft", im) for im in imgs[4:]]
+    assert ex.pending == 2 and all(not h.ready for h in second)
+    ex.flush_async()                         # dispatching retires the oldest
+    assert ex.in_flight <= 2
+    ex.drain()
+    assert ex.in_flight == 0
+    st = ex.telemetry.stats[("fft", "optical-sim")]
+    assert st.calls == 6 and st.invocations == 3
+    ser = OffloadExecutor(LANED_4F, max_batch=1, pipeline_depth=1)
+    ss = [ser.submit("fft", im) for im in imgs]
+    ser.flush()
+    for hb, hsr in zip(first + second, ss):
+        np.testing.assert_allclose(hb.value, hsr.value, rtol=1e-5, atol=1e-7)
+
+
 def test_pipeline_depth_one_is_serial():
     imgs = _imgs(4)
     ex = OffloadExecutor(LANED_4F, max_batch=1, pipeline_depth=1)
