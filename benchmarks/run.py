@@ -70,8 +70,10 @@ def main() -> None:
 
     # --- Offload runtime: batching amortization + telemetry round trip ---------------
     # Also writes BENCH_runtime.json (per-batch-size wall/boundary seconds
-    # per call + batched-vs-looped speedup) so the perf trajectory is
-    # machine-readable across PRs.
+    # per call + batched-vs-looped speedup, and the trickle-arrival
+    # continuous-batching column with its scheduler config — deadline,
+    # arrival rate, seed — stamped alongside the measured occupancies) so
+    # the perf trajectory is machine-readable AND interpretable across PRs.
     from benchmarks.runtime_bench import run as runtime_bench, write_json
     for row in runtime_bench(write_json()):
         print(row)

@@ -16,6 +16,15 @@ Three claims, measured on the executing runtime (not just the cost model):
   ``plan_offload`` and yields a plan whose offload decisions match how the
   router then executes (categories the plan offloads run on the analog
   backend, the rest stay host).
+* **Trickle arrivals: holding vs drain-on-flush** — under a Poisson
+  arrival process too sparse to fill a batch between flushes, the
+  admission-controlled ``OffloadScheduler`` holds partially filled groups
+  open across flushes (releasing on full / deadline / futile-to-wait) and
+  achieves strictly higher measured occupancy — calls and boundary samples
+  per conversion crossing — than the drain-every-flush regime, at a
+  bounded queueing-delay cost that the modeled wall prices explicitly
+  (``StepCost.hold_s``).  Arrivals ride a ``ManualClock``, so the
+  admission decisions (and therefore the column) are deterministic.
 * **Sharded vs single-device** — scattering the K=16 flush group across n
   replicated simulated accelerators (each paying its own DAC/ADC boundary)
   cuts the modeled invocation wall to max-over-devices + sync: the
@@ -40,12 +49,28 @@ import json
 import time
 
 import jax
+import numpy as np
 
-from repro.runtime import BATCHED_4F, OffloadExecutor, PlanRouter
+from repro.runtime import (
+    BATCHED_4F,
+    ManualClock,
+    OffloadExecutor,
+    OffloadScheduler,
+    PlanRouter,
+)
 
 SHAPE = (128, 128)
 CALLS = 16
 BENCH_JSON = "BENCH_runtime.json"
+
+# Trickle-arrival scenario: the scheduler config stamped into
+# BENCH_runtime.json so the occupancy trajectory stays interpretable
+# across PRs (change these and the column's meaning changes with them).
+TRICKLE_RATE_HZ = 200.0     # mean Poisson arrival rate
+TRICKLE_DEADLINE_S = 0.05   # per-call queueing-delay budget while held
+TRICKLE_ARRIVALS = 48
+TRICKLE_MAX_BATCH = 8
+TRICKLE_SEED = 0
 
 
 def _images(n: int = CALLS, shape: tuple[int, int] = SHAPE):
@@ -167,6 +192,82 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
     return rows
 
 
+def trickle_comparison(shape: tuple[int, int] = (64, 64),
+                       arrivals: int = TRICKLE_ARRIVALS,
+                       rate_hz: float = TRICKLE_RATE_HZ,
+                       deadline_s: float = TRICKLE_DEADLINE_S,
+                       max_batch: int = TRICKLE_MAX_BATCH,
+                       seed: int = TRICKLE_SEED) -> dict:
+    """Continuous batching vs drain-on-flush under Poisson trickle arrivals.
+
+    One seeded exponential inter-arrival trace drives both regimes on a
+    ``ManualClock`` (deterministic admission — no sleeps, no wall-clock
+    races).  ``drain`` flushes on every arrival, the pre-scheduler serving
+    pattern: occupancy pins at 1 whenever arrivals are sparser than
+    flushes.  ``held`` routes the same trace through an
+    ``OffloadScheduler``: groups stay open until full / due / futile, so
+    occupancy climbs toward ``rate * deadline`` (capped by ``max_batch``)
+    and the per-crossing boundary cost amortizes accordingly.  The queueing
+    delay that buys it is reported, not hidden: ``held_hold_s_per_call`` is
+    the modeled ``StepCost.hold_s`` share, and the modeled wall per call
+    includes it.
+    """
+    rng = np.random.RandomState(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=arrivals)
+    imgs = _images(arrivals, shape)
+
+    def _run(held: bool):
+        clk = ManualClock()
+        ex = OffloadExecutor(BATCHED_4F, max_batch=max_batch, clock=clk)
+        ex.warm("fft", imgs[0])
+        sched = OffloadScheduler(ex, deadline_s=deadline_s, clock=clk) \
+            if held else None
+        for gap, im in zip(gaps, imgs):
+            clk.advance(float(gap))
+            if held:
+                sched.submit("fft", im)
+            else:
+                ex.submit("fft", im)
+                ex.flush()          # drain-on-flush: one crossing per arrival
+        if held:
+            ex.drain()              # releases still-held groups
+        st = ex.telemetry.stats[("fft", "optical-sim")]
+        per_call = st.modeled.scaled(1.0 / st.calls)
+        return {
+            "occupancy": st.calls / st.invocations,
+            "samples_per_crossing": st.samples_in / st.invocations,
+            "invocations": st.invocations,
+            "boundary_s_per_call": per_call.conversion_s + per_call.interface_s,
+            "modeled_s_per_call": per_call.total_s,
+            "hold_s_per_call": per_call.hold_s,
+        }
+
+    drain, held = _run(held=False), _run(held=True)
+    return {
+        # the scheduler config this column was measured under
+        "arrival_rate_hz": rate_hz,
+        "deadline_s": deadline_s,
+        "arrivals": arrivals,
+        "max_batch": max_batch,
+        "seed": seed,
+        "shape": list(shape),
+        "drain_occupancy": drain["occupancy"],
+        "held_occupancy": held["occupancy"],
+        "drain_samples_per_crossing": drain["samples_per_crossing"],
+        "held_samples_per_crossing": held["samples_per_crossing"],
+        "drain_invocations": drain["invocations"],
+        "held_invocations": held["invocations"],
+        "drain_boundary_s_per_call": drain["boundary_s_per_call"],
+        "held_boundary_s_per_call": held["boundary_s_per_call"],
+        "held_hold_s_per_call": held["hold_s_per_call"],
+        "drain_modeled_s_per_call": drain["modeled_s_per_call"],
+        "held_modeled_s_per_call": held["modeled_s_per_call"],
+        "boundary_amortization":
+            drain["boundary_s_per_call"] / max(held["boundary_s_per_call"],
+                                               1e-12),
+    }
+
+
 def roundtrip() -> dict:
     """Profile on host -> plan from telemetry -> execute -> compare."""
     imgs = _images()
@@ -205,7 +306,10 @@ def roundtrip() -> dict:
 
 def bench_payload() -> dict:
     """Machine-readable benchmark record (written to ``BENCH_runtime.json``)
-    so the perf trajectory is tracked across PRs."""
+    so the perf trajectory is tracked across PRs.  ``trickle_comparison``
+    carries its scheduler config (deadline, arrival rate, seed) alongside
+    the measured occupancies, so the column stays interpretable when the
+    scenario constants move."""
     rt = roundtrip()
     rt = {k: v for k, v in rt.items() if k != "executed_on"}
     return {
@@ -215,6 +319,7 @@ def bench_payload() -> dict:
         "sweep": sweep(),
         "pipeline": pipeline_comparison(),
         "sharded": sharded_comparison(),
+        "trickle_comparison": trickle_comparison(),
         "roundtrip": rt,
     }
 
@@ -257,6 +362,17 @@ def run(payload: dict | None = None) -> list[str]:
             f"|boundary={1e6 * r['boundary_s_per_call']:.1f}us"
             f"|devices_used={r['devices_used']}"
             f"/{r['devices_present']}present")
+    t = payload["trickle_comparison"]
+    rows.append(
+        f"runtime,trickle,{1e6 * t['held_boundary_s_per_call']:.1f},"
+        f"held_occupancy={t['held_occupancy']:.2f}"
+        f"|drain_occupancy={t['drain_occupancy']:.2f}"
+        f"|samples_per_crossing={t['held_samples_per_crossing']:.0f}"
+        f"vs{t['drain_samples_per_crossing']:.0f}"
+        f"|amortization={t['boundary_amortization']:.2f}x"
+        f"|hold={1e6 * t['held_hold_s_per_call']:.1f}us"
+        f"|rate={t['arrival_rate_hz']:.0f}/s"
+        f"|deadline={1e3 * t['deadline_s']:.0f}ms")
     rt = payload["roundtrip"]
     rows.append(
         f"runtime,roundtrip,,speedup={rt['plan_speedup']:.2f}x"

@@ -26,6 +26,16 @@ batching story prices it:
                  backend): every device pays its own DAC/ADC boundary
                  crossing, telemetry aggregates per-device samples, and the
                  modeled invocation wall drops to max-over-devices + sync.
+  6. trickle   — serve a sparse Poisson arrival stream through the
+                 admission-controlled ``OffloadScheduler``: partially
+                 filled groups are *held open across flushes* (released
+                 when full, due, or futile to keep holding per the measured
+                 arrival rate), so occupancy climbs where drain-on-flush
+                 would cross the boundary one frame at a time — and the
+                 queueing delay that buys it is priced (``StepCost.hold_s``).
+
+Executors are context managers: each ``with`` block below guarantees no
+pending, held, or in-flight group outlives the demo that created it.
 
 Run:  PYTHONPATH=src python examples/optical_offload.py
 """
@@ -34,13 +44,16 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import PROTOTYPE_4F
 from repro.runtime import (
     BATCHED_4F,
     CONV_CAPTURES,
     FidelityChecker,
+    ManualClock,
     OffloadExecutor,
+    OffloadScheduler,
     PlanRouter,
 )
 
@@ -76,8 +89,16 @@ def main() -> None:
         .at[0, 0].add(0.5) for i in range(3)]
 
     fidelity = FidelityChecker()
-    executor = OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16,
-                               pipeline_depth=2)
+    # the executor is a context manager: nothing queued, held, or in
+    # flight survives the block (results materialize, telemetry balances)
+    with OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16,
+                         pipeline_depth=2) as executor:
+        run_plan_demo(executor, imgs, kernels)
+    run_sharded_demo(imgs, kernels)
+    run_trickle_demo()
+
+
+def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
     router = PlanRouter(executor)            # starts all-host: profiling mode
 
     # --- 1. profile: measured traffic, no hand-written numbers --------------
@@ -131,33 +152,76 @@ def main() -> None:
 
     # --- 4. verify: the accuracy cost of the speedup --------------------------
     print(f"\nend-to-end stack divergence vs host: rel error {rel:.4f}")
-    print(fidelity.summary())
+    print(executor.fidelity.summary())
 
+
+def run_sharded_demo(imgs, kernels) -> None:
     # --- 5. scale out: shard the flush group across replicated apertures ------
     # Photonic systems scale by replicating apertures, not growing one.
-    sharded = OffloadExecutor(BATCHED_4F, max_batch=16, n_devices=4,
-                              default_backend="sharded")
-    sharded.warm("conv", imgs[0], kernel=kernels[0], batch=len(imgs))
-    handles = [sharded.submit("conv", im, kernel=kernels[0]) for im in imgs]
-    sharded.flush()
-    # runtime-equivalence invariant, demonstrated: sharded == host reference
-    ref = [jnp.real(jnp.fft.ifft2(jnp.fft.fft2(im) * jnp.fft.fft2(kernels[0])))
-           for im in imgs]
-    rel_sh = max(float(jnp.linalg.norm(h.value - r) / jnp.linalg.norm(r))
-                 for h, r in zip(handles, ref))
-    sharded_total = sum(h.cost.total_s for h in handles)
-    single_total = dataclasses.replace(
-        BATCHED_4F, phase_shift_captures=CONV_CAPTURES).batched_step_cost(
-            512 * 512, batch=len(imgs), pipeline_depth=2).total_s
-    print("\n-- sharded offload: 4 replicated apertures, group sharding --")
-    per_dev = sharded.telemetry.device_samples("conv")
-    for d, (s_in, s_out) in per_dev.items():
-        print(f"  device {d}: {s_in} samples through its DAC, "
-              f"{s_out} back through its ADC")
-    print(f"sharded-vs-host rel error {rel_sh:.4f} (equivalence invariant)")
-    print(f"modeled invocation wall: sharded {sharded_total:.4g}s "
-          f"(max-over-devices + sync) vs single-device {single_total:.4g}s "
-          f"-> {single_total / sharded_total:.3f}x")
+    with OffloadExecutor(BATCHED_4F, max_batch=16, n_devices=4,
+                         default_backend="sharded") as sharded:
+        sharded.warm("conv", imgs[0], kernel=kernels[0], batch=len(imgs))
+        handles = [sharded.submit("conv", im, kernel=kernels[0])
+                   for im in imgs]
+        sharded.flush()
+        # runtime-equivalence invariant: sharded == host reference
+        ref = [jnp.real(jnp.fft.ifft2(jnp.fft.fft2(im)
+                                      * jnp.fft.fft2(kernels[0])))
+               for im in imgs]
+        rel_sh = max(float(jnp.linalg.norm(h.value - r) / jnp.linalg.norm(r))
+                     for h, r in zip(handles, ref))
+        sharded_total = sum(h.cost.total_s for h in handles)
+        single_total = dataclasses.replace(
+            BATCHED_4F, phase_shift_captures=CONV_CAPTURES).batched_step_cost(
+                512 * 512, batch=len(imgs), pipeline_depth=2).total_s
+        print("\n-- sharded offload: 4 replicated apertures, group sharding --")
+        per_dev = sharded.telemetry.device_samples("conv")
+        for d, (s_in, s_out) in per_dev.items():
+            print(f"  device {d}: {s_in} samples through its DAC, "
+                  f"{s_out} back through its ADC")
+        print(f"sharded-vs-host rel error {rel_sh:.4f} (equivalence invariant)")
+        print(f"modeled invocation wall: sharded {sharded_total:.4g}s "
+              f"(max-over-devices + sync) vs single-device {single_total:.4g}s "
+              f"-> {single_total / sharded_total:.3f}x")
+
+
+def run_trickle_demo(rate_hz: float = 200.0, deadline_s: float = 0.05,
+                     arrivals: int = 24) -> None:
+    # --- 6. trickle traffic: admission-controlled continuous batching ---------
+    # A Poisson stream too sparse to fill a batch between flushes.  The
+    # pre-scheduler regime drained the queue on every flush: occupancy 1,
+    # full handshake + settle per frame.  The scheduler holds partially
+    # filled groups open across flushes — released when full (max_batch),
+    # due (deadline), or futile (measured arrival rate says the next
+    # arrival lands past the deadline) — and the modeled wall prices the
+    # queueing delay it spent (StepCost.hold_s).  A ManualClock drives the
+    # arrivals, so the occupancy shown is deterministic.
+    frames = [jax.random.uniform(jax.random.fold_in(
+        jax.random.PRNGKey(42), i), (128, 128)) for i in range(arrivals)]
+    print(f"\n-- trickle arrivals ({rate_hz:.0f}/s Poisson, "
+          f"{deadline_s * 1e3:.0f} ms hold deadline) --")
+    for held in (False, True):
+        rng = np.random.RandomState(0)       # same trace for both regimes
+        clk = ManualClock()
+        with OffloadExecutor(BATCHED_4F, max_batch=8, clock=clk) as ex:
+            ex.warm("fft", frames[0])
+            sched = OffloadScheduler(ex, deadline_s=deadline_s, clock=clk) \
+                if held else None
+            for i, frame in enumerate(frames):
+                clk.advance(float(rng.exponential(1.0 / rate_hz)))
+                if held:
+                    sched.submit("fft", frame)   # polls: holds or releases
+                else:
+                    ex.submit("fft", frame)
+                    ex.flush()                   # drain-on-flush baseline
+        st = ex.telemetry.stats[("fft", "optical-sim")]
+        per_call = st.modeled.scaled(1.0 / st.calls)
+        label = "scheduler-held" if held else "drain-on-flush"
+        print(f"  {label:>15}: {st.calls} calls in {st.invocations} "
+              f"crossings (occupancy {st.calls / st.invocations:.2f}), "
+              f"boundary {per_call.conversion_s + per_call.interface_s:.4g}s"
+              f"/call, hold {per_call.hold_s:.4g}s/call, "
+              f"modeled wall {per_call.total_s:.4g}s/call")
 
 
 if __name__ == "__main__":

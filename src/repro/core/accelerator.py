@@ -54,10 +54,13 @@ class StepCost:
     interface_s: float      # host<->peripheral link (SLM write + camera read)
     analog_s: float         # the physics (time of flight / settle / exposure)
     host_s: float = 0.0     # digital post-processing (e.g. the host iFFT)
+    hold_s: float = 0.0     # queueing delay: how long the batch was held
+                            # open accumulating occupancy before dispatch
 
     @property
     def total_s(self) -> float:
-        return self.dac_s + self.adc_s + self.interface_s + self.analog_s + self.host_s
+        return (self.dac_s + self.adc_s + self.interface_s + self.analog_s
+                + self.host_s + self.hold_s)
 
     @property
     def conversion_s(self) -> float:
@@ -65,7 +68,12 @@ class StepCost:
 
     @property
     def data_movement_fraction(self) -> float:
-        """Fraction of wall time spent moving/converting data (paper: 99.599%)."""
+        """Fraction of wall time spent moving/converting data (paper: 99.599%).
+
+        Hold time is queueing, not movement: it sits in neither the
+        numerator nor this fraction's story, but it does stretch
+        ``total_s`` — an invocation that waited for its batch is slower
+        end to end, honestly."""
         tot = self.total_s
         if tot <= 0:
             return 0.0
@@ -73,7 +81,7 @@ class StepCost:
 
     def scaled(self, k: float) -> "StepCost":
         return StepCost(self.dac_s * k, self.adc_s * k, self.interface_s * k,
-                        self.analog_s * k, self.host_s * k)
+                        self.analog_s * k, self.host_s * k, self.hold_s * k)
 
     def __add__(self, other: "StepCost") -> "StepCost":
         if not isinstance(other, StepCost):
@@ -81,7 +89,8 @@ class StepCost:
         return StepCost(self.dac_s + other.dac_s, self.adc_s + other.adc_s,
                         self.interface_s + other.interface_s,
                         self.analog_s + other.analog_s,
-                        self.host_s + other.host_s)
+                        self.host_s + other.host_s,
+                        self.hold_s + other.hold_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,8 +173,16 @@ class OpticalFourierAcceleratorSpec:
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
-                          n_devices: int = 1) -> StepCost:
+                          n_devices: int = 1,
+                          hold_s: float = 0.0) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
+
+        ``hold_s`` is the queueing delay a continuous-batching scheduler
+        spent holding this group open to accumulate occupancy (age of the
+        oldest coalesced call at dispatch).  It is charged whole to the
+        invocation's wall clock — amortization bought by waiting is only a
+        win when the handshake savings exceed the wait, and pricing the
+        wait is what keeps that trade honest.
 
         The batch is packed spatially onto the aperture (the runtime's §6
         amortization lever): the converters still touch every sample
@@ -216,7 +233,7 @@ class OpticalFourierAcceleratorSpec:
             eff = min(n_devices, batch)
             per = self.batched_step_cost(
                 n_in, n_out, batch=math.ceil(batch / eff),
-                host_s=host_s, pipeline_depth=pipeline_depth)
+                host_s=host_s, pipeline_depth=pipeline_depth, hold_s=hold_s)
             return dataclasses.replace(
                 per, interface_s=per.interface_s
                 + eff * self.device_sync_s)
@@ -242,7 +259,7 @@ class OpticalFourierAcceleratorSpec:
                 analog_s *= hidden
         return StepCost(dac_s=dac_s, adc_s=adc_s,
                         interface_s=intf_in + intf_out,
-                        analog_s=analog_s, host_s=host_s)
+                        analog_s=analog_s, host_s=host_s, hold_s=hold_s)
 
     def step_energy_j(self, n_in: int, n_out: int | None = None) -> float:
         if n_out is None:
@@ -285,8 +302,12 @@ class OpticalMVMAcceleratorSpec:
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
-                          n_devices: int = 1) -> StepCost:
+                          n_devices: int = 1,
+                          hold_s: float = 0.0) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
+
+        ``hold_s`` charges continuous-batching queueing delay to the
+        invocation wall, exactly as on the 4f family.
 
         ``pipeline_depth >= 2`` models double-buffered streaming: the DAC
         loads activation set b+1 while set b is in the optical core / ADC,
@@ -313,7 +334,7 @@ class OpticalMVMAcceleratorSpec:
             eff = min(n_devices, batch)
             per = self.batched_step_cost(
                 n_in, n_out, batch=math.ceil(batch / eff),
-                host_s=host_s, pipeline_depth=pipeline_depth)
+                host_s=host_s, pipeline_depth=pipeline_depth, hold_s=hold_s)
             return dataclasses.replace(
                 per, interface_s=per.interface_s
                 + eff * self.device_sync_s)
@@ -329,7 +350,7 @@ class OpticalMVMAcceleratorSpec:
                 analog_s *= hidden
         return StepCost(dac_s=dac_s, adc_s=adc_s,
                         interface_s=self.interface_latency_s,
-                        analog_s=analog_s, host_s=host_s)
+                        analog_s=analog_s, host_s=host_s, hold_s=hold_s)
 
     def matmul_cost(self, m: int, k: int, n: int) -> StepCost:
         """Cost of an (m,k) @ (k,n) matmul tiled onto the optical core.

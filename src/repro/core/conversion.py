@@ -34,11 +34,31 @@ __all__ = [
     "ConverterSpec",
     "KIM_2019_DAC",
     "LIU_2022_ADC",
+    "enob_error_bound",
     "pareto_fom_fj",
     "pareto_power_w",
     "frontier_gap",
     "conversion_complexity",
 ]
+
+
+def enob_error_bound(enob: float, slack: float = 16.0) -> float:
+    """Relative-error budget implied by ``enob`` effective bits.
+
+    A b-bit uniform quantizer on a full-scale signal contributes RMS error
+    ~ q / sqrt(12) with q = 1 / (2^b - 1), i.e. a relative L2 error on the
+    order of 2^-b; ``slack`` widens that ideal floor to cover detector
+    squaring, ADC auto-ranging, and error accumulation across a pipeline.
+    ``enob <= 0`` means the converter promises nothing — the budget is
+    infinite and no result can violate it.
+
+    Lives here (next to :class:`ConverterSpec`) because both the runtime's
+    ``FidelityChecker`` and the planner's fidelity gate consume it — the
+    planner must not import from ``repro.runtime``.
+    """
+    if enob <= 0:
+        return math.inf
+    return slack * 2.0 ** (-enob)
 
 
 @dataclasses.dataclass(frozen=True)

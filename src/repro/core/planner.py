@@ -6,7 +6,13 @@ and an analog accelerator spec, the planner:
   1. prices each accelerable category on the accelerator *including* the
      DAC/ADC + interface costs (the paper's whole point — never price the
      analog compute alone);
-  2. offloads a category only when the priced accelerator time beats the host;
+  2. offloads a category only when the priced accelerator time beats the host
+     AND its observed quantization error (``CategoryProfile.rel_err``, fed by
+     the runtime's fidelity shadowing) stays inside the budget implied by the
+     converters' ENOB — the paper's argument cuts both ways: skimping on
+     conversion buys speed by spending accuracy, and a category whose error
+     blows the bound must not be offloaded no matter how fast it runs
+     (``OffloadDecision.fidelity_bound`` records the veto);
   3. reports the end-to-end Amdahl speedup, the zero-cost ideal bound
      (paper Table 1), and the verdict against the 10x build-threshold (§5).
 
@@ -26,6 +32,7 @@ from repro.core.accelerator import (
     OpticalFourierAcceleratorSpec,
     OpticalMVMAcceleratorSpec,
 )
+from repro.core.conversion import enob_error_bound
 
 __all__ = [
     "CategoryProfile",
@@ -49,6 +56,10 @@ class CategoryProfile:
       *run* (summed over calls).
     host_post_s: digital post-processing that offload cannot remove (e.g.
       the host-side inverse FFT of the 4f convolution pipeline).
+    rel_err: observed relative error of this category's offloaded execution
+      (worst ``FidelityChecker`` shadow score), or None when never shadowed.
+      Fed by ``PlanRouter.replan`` so a category whose measured error blows
+      the converters' ENOB budget is fidelity-gated off the accelerator.
     """
 
     name: str
@@ -57,6 +68,7 @@ class CategoryProfile:
     samples_in: int = 0
     samples_out: int = 0
     host_post_s: float = 0.0
+    rel_err: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +78,9 @@ class OffloadDecision:
     accel_s: float          # conversion + interface + analog + residual host
     conversion_s: float     # DAC+ADC share of accel_s
     offload: bool
+    # True when the category's observed rel_err exceeds the ENOB budget:
+    # offload is vetoed on accuracy grounds regardless of speedup.
+    fidelity_bound: bool = False
 
     @property
     def category_speedup(self) -> float:
@@ -110,14 +125,24 @@ class OffloadPlan:
         acc = sum(d.accel_s for d in self.decisions if d.offload)
         return acc > 0 and conv / acc > 0.5
 
+    @property
+    def fidelity_bound(self) -> bool:
+        """True when any category was vetoed on accuracy: its observed
+        quantization error exceeds the converters' ENOB budget, so it stays
+        on the host regardless of speedup."""
+        return any(d.fidelity_bound for d in self.decisions)
+
     def summary(self) -> str:
         rows = [f"plan[{self.accelerator}] speedup={self.end_to_end_speedup:.2f}x "
                 f"(ideal={self.ideal_speedup:.2f}x, f={self.offloaded_fraction:.2%}, "
-                f"worthwhile={self.worthwhile}, conversion_bound={self.conversion_bound})"]
+                f"worthwhile={self.worthwhile}, "
+                f"conversion_bound={self.conversion_bound}, "
+                f"fidelity_bound={self.fidelity_bound})"]
         for d in self.decisions:
+            gate = " FIDELITY-GATED" if d.fidelity_bound else ""
             rows.append(f"  {d.category:>8}: host={d.host_s:.4g}s "
                         f"accel={d.accel_s:.4g}s (conv {d.conversion_s:.4g}s) "
-                        f"offload={d.offload}")
+                        f"offload={d.offload}{gate}")
         return "\n".join(rows)
 
 
@@ -157,19 +182,30 @@ def _price(spec, prof: CategoryProfile,
 
 def plan_offload(profiles: Sequence[CategoryProfile],
                  spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec,
-                 *, max_batch: int | Mapping[str, int] = 1) -> OffloadPlan:
+                 *, max_batch: int | Mapping[str, int] = 1,
+                 fidelity_slack: float = 16.0) -> OffloadPlan:
     """Price every category on ``spec`` and keep only profitable offloads.
 
     ``max_batch=1`` (default) is the paper's serial one-call-per-crossing
     model; a larger int prices the runtime's batched execution uniformly,
     and a ``{category: batch}`` mapping prices each category at its own
     coalescing depth (absent categories price serially).
+
+    Offload is additionally *fidelity-gated*: a profile carrying an
+    observed ``rel_err`` above the relative-error budget implied by the
+    spec's limiting converter ENOB (``enob_error_bound``, widened by
+    ``fidelity_slack`` — the ``FidelityChecker`` default) is kept on the
+    host even when the accelerator is faster, and its decision records
+    ``fidelity_bound=True``.  Profiles without an observed error (never
+    shadowed) are gated on speed alone, as before.
     """
     supported = ()
     for klass, cats in _SUPPORTS.items():
         if isinstance(spec, klass):
             supported = cats
             break
+    enob = min(spec.dac.effective_bits, spec.adc.effective_bits)
+    err_budget = enob_error_bound(enob, fidelity_slack)
     decisions = []
     total_host = 0.0
     total_planned = 0.0
@@ -179,11 +215,14 @@ def plan_offload(profiles: Sequence[CategoryProfile],
             cat_batch = max_batch.get(prof.name, 1) \
                 if isinstance(max_batch, Mapping) else max_batch
             accel_s, conv_s = _price(spec, prof, cat_batch)
-            offload = accel_s < prof.host_s
+            fidelity_bound = (prof.rel_err is not None
+                              and prof.rel_err > err_budget)
+            offload = accel_s < prof.host_s and not fidelity_bound
             decisions.append(OffloadDecision(
                 category=prof.name, host_s=prof.host_s, accel_s=accel_s,
-                conversion_s=conv_s, offload=offload))
-            total_planned += min(accel_s, prof.host_s)
+                conversion_s=conv_s, offload=offload,
+                fidelity_bound=fidelity_bound))
+            total_planned += accel_s if offload else prof.host_s
         else:
             decisions.append(OffloadDecision(
                 category=prof.name, host_s=prof.host_s, accel_s=math.inf,

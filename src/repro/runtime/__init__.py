@@ -17,14 +17,32 @@ that runs it.  Module map:
                paper's §6 batching lever, executed rather than modeled),
                pipelined two deep (``flush_async``: invocation k+1 stages
                while invocation k computes; per-result ``wait``/``done``),
-               with per-category coalescing ceilings (``set_max_batch``)
-               and per-shape DFT-factor / Fourier-mask / jit caches.
+               with per-category coalescing ceilings (``set_max_batch``),
+               per-shape DFT-factor / Fourier-mask / jit caches, a public
+               group-release primitive (``release``) the scheduler drives,
+               and context-manager cleanup (``with`` drains queued, held,
+               and in-flight work).
+  scheduler  — ``OffloadScheduler``: admission-controlled continuous
+               batching over the executor — partially filled groups are
+               *held open across flushes* under a per-category deadline and
+               released when full (``max_batch``), due (oldest age reaches
+               the deadline), or futile to hold (the telemetry-estimated
+               arrival rate says the next arrival lands past the deadline);
+               hold time is priced into the invocation
+               (``StepCost.hold_s``).  ``ManualClock`` makes admission
+               deterministic in tests/benchmarks.
   telemetry  — ``RuntimeTelemetry``: measured per-category call counts,
-               sample counts, and wall time, emitted as ``CategoryProfile``s
-               so ``plan_offload`` re-plans from observed traffic.
+               sample counts, wall time, and the submit arrival process
+               (``arrival_rate``), emitted as ``CategoryProfile``s so
+               ``plan_offload`` re-plans from observed traffic.
   fidelity   — ``FidelityChecker``: shadows optical-sim batches with the
-               host reference and scores quantization error against the
-               converters' ENOB budget, pairing speedups with accuracy.
+               host reference (vectorized: one norm reduction + one sync
+               per batch; ``sample_every`` bounds hot-path cost) and scores
+               quantization error against the converters' ENOB budget,
+               pairing speedups with accuracy — and *gating* planning:
+               ``replan`` threads the worst observed error into each
+               profile so an over-budget category is vetoed off the
+               accelerator regardless of speedup.
   sharded    — ``ShardedOpticalBackend``: scatters one batched invocation
                across ``n_devices`` replicated simulated accelerators —
                group sharding (the stacked flush group splits across
@@ -69,6 +87,7 @@ from repro.runtime.backends import (
 from repro.runtime.executor import OffloadExecutor, OffloadResult
 from repro.runtime.fidelity import FidelityChecker, FidelityReport, enob_error_bound
 from repro.runtime.router import PlanRouter
+from repro.runtime.scheduler import ManualClock, OffloadScheduler
 from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
 from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
 from repro.runtime.telemetry import BackendStats, DeviceStats, RuntimeTelemetry
@@ -90,6 +109,8 @@ __all__ = [
     "FidelityReport",
     "enob_error_bound",
     "PlanRouter",
+    "ManualClock",
+    "OffloadScheduler",
     "ShardedOpticalBackend",
     "kernel_halo",
     "shard_sizes",

@@ -10,6 +10,19 @@ instead of K, while per-invocation boundary costs (link handshake latency,
 SLM settle/exposure, converter-lane ceil residue) amortize across the batch
 in the modeled price.
 
+Since the scheduler refactor, *flushing is a mechanism, not a policy*:
+``flush``/``flush_async`` still drain the whole queue (the eager path), but
+the group-releasing primitive they are built on — :meth:`OffloadExecutor.release`
+— is public, and an attached :class:`~repro.runtime.scheduler.OffloadScheduler`
+drives it selectively: partially filled groups stay queued ("held") across
+scheduler passes until admission control says waiting can no longer raise
+occupancy.  Every submission is timestamped, so held groups know their age,
+telemetry knows the arrival process, and a group's queueing delay is priced
+into its invocation (``StepCost.hold_s``) when a scheduler is in charge.
+The executor is also a context manager: leaving the ``with`` block flushes
+queued + held work and drains the pipeline, so examples and tests cannot
+leak pending groups.
+
 ``flush`` is additionally *pipelined* two deep: dispatch is asynchronous
 (JAX async dispatch — no premature ``block_until_ready``), so while group
 k's analog+ADC compute is in flight, group k+1's host-side staging and
@@ -33,7 +46,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping
 
 import jax
 
@@ -133,6 +146,7 @@ class _Pending:
     weights: jax.Array | None
     backend: str
     result: OffloadResult
+    t_submit: float = 0.0   # executor-clock submission timestamp
 
     def group_key(self) -> tuple:
         return (self.category, self.backend, tuple(self.x.shape),
@@ -150,6 +164,8 @@ class _Inflight:
     t0: float
     dispatch_s: float  # host time spent staging + dispatching (be.run)
     device_samples: list[tuple[int, int]] | None = None  # sharded dispatch
+    shadow: bool = False  # fidelity shadow-scoring owed at retire
+    hold_s: float = 0.0   # scheduler hold time priced into this invocation
 
 
 class OffloadExecutor:
@@ -178,6 +194,13 @@ class OffloadExecutor:
         coalescing depth.
       shard_mode: the sharded backend's split policy (``auto`` / ``group``
         / ``frame`` — see ``repro.runtime.sharded``).
+      clock: timebase for submission timestamps, hold accounting, and the
+        telemetry arrival-rate estimate (``time.perf_counter`` by default;
+        tests and benchmarks inject a manual clock for deterministic
+        admission decisions).
+
+    Use as a context manager to guarantee nothing leaks: ``__exit__``
+    flushes queued *and* scheduler-held work, then drains the pipeline.
     """
 
     def __init__(self,
@@ -190,7 +213,8 @@ class OffloadExecutor:
                  max_batch: int = 32,
                  pipeline_depth: int = 2,
                  n_devices: int = 1,
-                 shard_mode: str = "auto") -> None:
+                 shard_mode: str = "auto",
+                 clock: Callable[[], float] = time.perf_counter) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if pipeline_depth < 1:
@@ -209,10 +233,15 @@ class OffloadExecutor:
         self.n_devices = n_devices
         self._category_max_batch: dict[str, int] = {}
         self._category_n_devices: dict[str, int] = {}
+        self._clock = clock
         self._queue: list[_Pending] = []
         self._inflight: collections.deque[_Inflight] = collections.deque()
         self._last_retire_end = 0.0
         self._backends: dict[str, ExecutionBackend] = {}
+        # the admission-control policy driving release decisions, when one
+        # is attached (repro.runtime.scheduler.OffloadScheduler); None means
+        # the classic eager regime: every flush drains the queue
+        self._scheduler = None
 
     @property
     def spec(self):
@@ -271,6 +300,26 @@ class OffloadExecutor:
             raise ValueError("matmul requires weights=")
         return name
 
+    # -- lifetime --------------------------------------------------------------
+    def attach_scheduler(self, scheduler) -> None:
+        """Install the admission-control policy that decides when queued
+        groups release (``OffloadScheduler`` calls this; ``None`` detaches
+        and restores the eager drain-on-flush regime)."""
+        self._scheduler = scheduler
+
+    @property
+    def scheduler(self):
+        return self._scheduler
+
+    def __enter__(self) -> "OffloadExecutor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # Drain even when unwinding an exception: handles given out must
+        # not be left forever-pending, and telemetry must balance.
+        self.flush()
+        return False
+
     # -- client API ------------------------------------------------------------
     def submit(self, category: str, x: jax.Array, *,
                kernel: jax.Array | None = None,
@@ -279,7 +328,10 @@ class OffloadExecutor:
         """Queue one call; returns a handle materialized at ``flush``."""
         name = self._validate(category, backend, kernel, weights)
         result = OffloadResult(self)
-        self._queue.append(_Pending(category, x, kernel, weights, name, result))
+        t = self._clock()
+        self.telemetry.note_submit(category, t)
+        self._queue.append(_Pending(category, x, kernel, weights, name,
+                                    result, t_submit=t))
         return result
 
     def run(self, category: str, x: jax.Array, **kwargs) -> jax.Array:
@@ -346,6 +398,45 @@ class OffloadExecutor:
         self.drain()
         return done
 
+    def pending_groups(self) -> dict[tuple, list[_Pending]]:
+        """Queued submissions grouped exactly as dispatch would group them
+        (category, backend, shape, dtype, operand identity), submission
+        order preserved within each group.  This is the scheduler's view of
+        the held queue — entries expose ``category`` and ``t_submit`` for
+        admission decisions.  The mapping is a snapshot; mutate the queue
+        only through :meth:`release` / :meth:`flush_async`."""
+        groups: dict[tuple, list[_Pending]] = {}
+        for p in self._queue:
+            groups.setdefault(p.group_key(), []).append(p)
+        return groups
+
+    def release(self, key: tuple, count: int | None = None,
+                ) -> list[OffloadResult]:
+        """Dispatch the first ``count`` queued members of group ``key``
+        (all of them by default), leaving the rest *held* in the queue.
+
+        This is the primitive the :class:`OffloadScheduler` drives:
+        ``flush_async`` is simply "release every group whole".  Each
+        released run of members dispatches as ceil(n / max_batch) batched
+        invocations through the async pipeline; hold time (dispatch minus
+        oldest member's submit) is priced into the invocation when a
+        scheduler is attached.
+        """
+        members = [p for p in self._queue if p.group_key() == key]
+        if count is not None:
+            members = members[:count]
+        if not members:
+            return []
+        chosen = set(map(id, members))
+        self._queue = [p for p in self._queue if id(p) not in chosen]
+        done: list[OffloadResult] = []
+        cap = self.max_batch_for(members[0].category)
+        for i in range(0, len(members), cap):
+            chunk = members[i:i + cap]
+            self._dispatch_async(chunk)
+            done.extend(p.result for p in chunk)
+        return done
+
     def flush_async(self) -> list[OffloadResult]:
         """Execute everything queued without a final barrier.
 
@@ -358,22 +449,27 @@ class OffloadExecutor:
         dispatching invocation k+depth first retires invocation k (blocks
         it and records telemetry).  Invocations still in flight on return
         retire at the next flush, ``drain``, or ``result.wait()``.
+
+        With a scheduler attached this is the *force-release* path (used by
+        ``flush``, ``drain``, ``OffloadResult.get`` and the context-manager
+        exit): held groups dispatch immediately, with their accumulated
+        hold time priced in.  Scheduler-paced release goes through
+        :meth:`release` via ``OffloadScheduler.poll`` instead.
         """
-        queue, self._queue = self._queue, []
-        groups: dict[tuple, list[_Pending]] = {}
-        for p in queue:
-            groups.setdefault(p.group_key(), []).append(p)
         done: list[OffloadResult] = []
-        for members in groups.values():
-            cap = self.max_batch_for(members[0].category)
-            for i in range(0, len(members), cap):
-                chunk = members[i:i + cap]
-                self._dispatch_async(chunk)
-                done.extend(p.result for p in chunk)
+        for key in list(self.pending_groups()):
+            done.extend(self.release(key))
         return done
 
     def drain(self) -> None:
-        """Retire every in-flight invocation (block + record telemetry)."""
+        """Retire every in-flight invocation (block + record telemetry).
+
+        With a scheduler attached, scheduler-held groups release first —
+        ``drain`` is the "nothing may remain pending" barrier, and a held
+        group is pending work the barrier must cover.
+        """
+        if self._scheduler is not None and self._queue:
+            self.flush_async()
         while self._inflight:
             self._retire(self._inflight.popleft())
 
@@ -397,6 +493,13 @@ class OffloadExecutor:
         xs = [p.x for p in chunk]
         # per-category device fan-out, written the same way warm() writes it
         self.ctx.n_devices = self.n_devices_for(head.category)
+        # Queueing delay under admission control: age of the oldest
+        # coalesced call at dispatch.  Only priced when a scheduler is in
+        # charge — eager flushes dispatch at submit granularity and their
+        # sub-microsecond queue residence would just add noise to the
+        # deterministic modeled columns benchmarks assert on.
+        hold_s = (self._clock() - min(p.t_submit for p in chunk)
+                  if self._scheduler is not None else 0.0)
         t0 = time.perf_counter()
         outs, modeled = be.run(head.category, xs, self.ctx,
                                kernel=head.kernel, weights=head.weights)
@@ -404,21 +507,31 @@ class OffloadExecutor:
         take = getattr(be, "take_device_samples", None)
         device_samples = take() if take is not None else None
         batch = len(chunk)
+        if modeled is not None and hold_s > 0.0:
+            # the modeled wall honestly prices the time this group spent
+            # held open accumulating occupancy (StepCost.hold_s)
+            modeled = dataclasses.replace(
+                modeled, hold_s=modeled.hold_s + hold_s)
         # host-like backends have no modeled price: provisional cost is the
         # staging+dispatch wall share (refined to the full measured wall at
         # retire), so ``cost`` honors the 'valid once ready' contract even
         # between flush_async and drain
         share = modeled.scaled(1.0 / batch) if modeled is not None \
-            else StepCost(0.0, 0.0, 0.0, 0.0, host_s=dispatch_s / batch)
+            else StepCost(0.0, 0.0, 0.0, 0.0, host_s=dispatch_s / batch,
+                          hold_s=hold_s / batch)
         for p, out in zip(chunk, outs):
             # async fill: the value is dispatched, not yet materialized
             p.result._fill(out, share, be.name, batch, None)
+        shadow = (self.fidelity is not None and be.name in _SHADOWED
+                  and self.fidelity.should_check(head.category))
         inflight = _Inflight(chunk=chunk, be=be, outs=outs,
                              modeled=modeled, t0=t0, dispatch_s=dispatch_s,
-                             device_samples=device_samples)
-        if self.fidelity is not None and be.name in _SHADOWED:
+                             device_samples=device_samples, shadow=shadow,
+                             hold_s=hold_s)
+        if shadow:
             # shadow scoring needs concrete values: validation mode is
-            # synchronous by construction
+            # synchronous by construction (batches the sample_every knob
+            # skips keep the async pipeline)
             self._retire(inflight)
         else:
             self._inflight.append(inflight)
@@ -447,7 +560,7 @@ class OffloadExecutor:
             samples_in=samples_in, samples_out=samples_out, wall_s=wall,
             modeled=f.modeled, per_device=f.device_samples)
         report = None
-        if self.fidelity is not None and f.be.name in _SHADOWED:
+        if f.shadow:
             t1 = time.perf_counter()
             refs, _ = self._backend("host").run(
                 f.chunk[0].category, [p.x for p in f.chunk], self.ctx,
@@ -462,8 +575,11 @@ class OffloadExecutor:
             self.telemetry.discount_window(dt)
             self._last_retire_end += dt
         if f.modeled is None:
-            # refine the provisional dispatch-only share to the measured wall
-            measured = StepCost(0.0, 0.0, 0.0, 0.0, host_s=wall / batch)
+            # refine the provisional dispatch-only share to the measured
+            # wall (the hold share survives the refinement: queueing delay
+            # is real whichever backend served the release)
+            measured = StepCost(0.0, 0.0, 0.0, 0.0, host_s=wall / batch,
+                                hold_s=f.hold_s / batch)
             for p in f.chunk:
                 p.result.cost = measured
         if report is not None:

@@ -9,30 +9,35 @@ error against the bound implied by the converters' ENOB.
 
 The bound: a b-bit uniform quantizer on a full-scale signal contributes
 RMS error ~ q / sqrt(12) with q = 1 / (2^b - 1), i.e. a relative L2 error
-on the order of 2^-b.  The optical pipeline squares the field at the
-detector (intensity doubles relative error) and auto-ranges the ADC, so we
-allow a configurable slack factor over the ideal-quantizer floor; what the
-checker *guarantees* is the paper-relevant direction: error decreases as
-converter resolution increases, and a result that blows through the bound
-flags a broken offload rather than silently serving garbage.
+on the order of 2^-b (see :func:`repro.core.conversion.enob_error_bound`,
+shared with the planner's fidelity gate).  The optical pipeline squares the
+field at the detector (intensity doubles relative error) and auto-ranges
+the ADC, so we allow a configurable slack factor over the ideal-quantizer
+floor; what the checker *guarantees* is the paper-relevant direction:
+error decreases as converter resolution increases, and a result that blows
+through the bound flags a broken offload rather than silently serving
+garbage.
+
+Scoring is vectorized: the whole batch reduces to per-frame L2 norms in
+ONE fused device computation and ONE host sync (a per-frame ``float()``
+loop would pay a blocking device round-trip per frame — K syncs for a
+K-deep batch on the hot path).  ``sample_every`` bounds the shadowing cost
+further: only every Nth batch per category is scored (the skipped batches
+also keep the executor's async pipeline, since shadow scoring is the part
+that forces synchronous retirement).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.conversion import enob_error_bound
+
 __all__ = ["FidelityReport", "FidelityChecker", "enob_error_bound"]
-
-
-def enob_error_bound(enob: float, slack: float = 16.0) -> float:
-    """Relative-error budget implied by ``enob`` effective bits."""
-    if enob <= 0:
-        return math.inf
-    return slack * 2.0 ** (-enob)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,11 +60,22 @@ class FidelityReport:
                 f"(enob={self.enob:.1f}) {flag}")
 
 
-def _rel_err(got: jax.Array, ref: jax.Array) -> float:
-    got = jnp.asarray(got, jnp.float32)
-    ref = jnp.asarray(ref, jnp.float32)
-    denom = jnp.maximum(jnp.linalg.norm(ref.reshape(-1)), 1e-12)
-    return float(jnp.linalg.norm((got - ref).reshape(-1)) / denom)
+@jax.jit
+def _batch_rel_err(got: jax.Array, ref: jax.Array) -> jax.Array:
+    """Worst per-frame relative L2 error over a ``(K, n)`` stacked batch —
+    one reduction, one scalar out (the caller's ``float()`` is the only
+    device sync for the whole batch).
+
+    Zero-norm reference frames are well-defined rather than
+    denominator-clamped garbage: a zero reference reproduced exactly scores
+    0; any nonzero output against a zero reference scores ``inf`` (the
+    offload fabricated signal out of nothing — always a violation for any
+    finite bound)."""
+    err = jnp.linalg.norm(got - ref, axis=1)
+    refn = jnp.linalg.norm(ref, axis=1)
+    rel = jnp.where(refn > 0.0, err / jnp.where(refn > 0.0, refn, 1.0),
+                    jnp.where(err > 0.0, jnp.inf, 0.0))
+    return jnp.max(rel)
 
 
 class FidelityChecker:
@@ -68,15 +84,34 @@ class FidelityChecker:
     ``slack`` widens the ideal-quantizer floor to cover detector squaring,
     ADC auto-ranging, and error accumulation across the DFT; tune it down
     to make the checker stricter.
+
+    ``sample_every=N`` scores only every Nth shadowed batch per category
+    (the executor consults :meth:`should_check` before paying the shadow
+    reference run), bounding validation overhead on hot paths; 1 (default)
+    scores everything.
     """
 
-    def __init__(self, slack: float = 16.0) -> None:
+    def __init__(self, slack: float = 16.0, sample_every: int = 1) -> None:
+        if sample_every < 1:
+            raise ValueError("sample_every must be >= 1")
         self.slack = slack
+        self.sample_every = sample_every
         self.reports: list[FidelityReport] = []
+        self._seen: collections.Counter[str] = collections.Counter()
+
+    def should_check(self, category: str) -> bool:
+        """Sampling decision for the next shadowed batch of ``category``
+        (consumes one tick of the per-category ``sample_every`` cycle; the
+        first batch of every category is always scored)."""
+        n = self._seen[category]
+        self._seen[category] += 1
+        return n % self.sample_every == 0
 
     def check(self, category: str, backend: str, got: list[jax.Array],
               ref: list[jax.Array], *, enob: float) -> FidelityReport:
-        rel = max(_rel_err(g, r) for g, r in zip(got, ref))
+        g = jnp.stack([jnp.ravel(jnp.asarray(x, jnp.float32)) for x in got])
+        r = jnp.stack([jnp.ravel(jnp.asarray(x, jnp.float32)) for x in ref])
+        rel = float(_batch_rel_err(g, r))
         report = FidelityReport(category=category, backend=backend,
                                 batch=len(got), rel_err=rel, enob=enob,
                                 bound=enob_error_bound(enob, self.slack))

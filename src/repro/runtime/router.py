@@ -190,6 +190,15 @@ class PlanRouter:
         of ``apply`` — the caps stop being fixed constructor arguments and
         follow the workload.
 
+        Fidelity gating: when the executor shadows offloaded batches
+        (``fidelity=``), each profile carries the checker's worst observed
+        ``rel_err`` for its category into ``plan_offload``, which vetoes
+        offload for categories whose error exceeds the converters' ENOB
+        budget *regardless of speedup* (``OffloadDecision.fidelity_bound``).
+        Applying such a plan routes the degraded category back to the host
+        — the profile -> plan -> execute -> re-profile loop now closes over
+        accuracy as well as time.
+
         ``extra_profiles`` lets callers append workload the runtime never
         saw (e.g. a known non-offloadable phase); ``apply=False`` prices
         without touching the routing table or the executor's ceilings.
@@ -197,6 +206,13 @@ class PlanRouter:
         telemetry = self.executor.telemetry
         profiles = list(telemetry.profiles())
         profiles.extend(extra_profiles)
+        checker = self.executor.fidelity
+        if checker is not None:
+            profiles = [
+                dataclasses.replace(p, rel_err=w.rel_err)
+                if (w := checker.worst(p.name)) is not None else p
+                for p in profiles
+            ]
         chosen: dict[str, tuple[int, int]] | None = None
         if max_batch is None:
             chosen = self.choose_sharding(deadline_s)
@@ -208,8 +224,12 @@ class PlanRouter:
                 for cat in telemetry.categories()}
         else:
             batch = max_batch
+        # the gate must judge with the checker's own slack, or the plan's
+        # fidelity verdicts disagree with the checker's VIOLATION reports
+        gate_kw = {} if checker is None \
+            else {"fidelity_slack": checker.slack}
         plan = plan_offload(profiles, spec or self.executor.spec,
-                            max_batch=batch)
+                            max_batch=batch, **gate_kw)
         if apply:
             self.apply(plan)
             if chosen is not None:

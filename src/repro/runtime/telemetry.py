@@ -70,6 +70,11 @@ class DeviceStats:
     samples_out: int = 0      # scalars back through THIS device's ADC
 
 
+# How many recent submit timestamps back the arrival-rate estimate (enough
+# to smooth Poisson burstiness, few enough to track a changing rate).
+_ARRIVAL_WINDOW = 64
+
+
 class RuntimeTelemetry:
     """Records executor traffic and emits measured ``CategoryProfile``s."""
 
@@ -79,6 +84,12 @@ class RuntimeTelemetry:
         # (category, backend) -> device index -> per-device boundary traffic
         self.device_stats: dict[tuple[str, str], dict[int, DeviceStats]] = \
             collections.defaultdict(dict)
+        # category -> recent submit timestamps (the arrival process itself,
+        # recorded at submit rather than dispatch so held traffic still has
+        # an honest rate estimate)
+        self._submits: dict[str, collections.deque[float]] = \
+            collections.defaultdict(
+                lambda: collections.deque(maxlen=_ARRIVAL_WINDOW))
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -97,6 +108,29 @@ class RuntimeTelemetry:
     @property
     def window_s(self) -> float:
         return self._window_s
+
+    # -- arrival process (the scheduler's admission signal) -------------------
+    def note_submit(self, category: str, t: float | None = None) -> None:
+        """Record one offload submission at time ``t`` (the executor stamps
+        its own clock so submit ages and arrival rates share a timebase)."""
+        self._submits[category].append(
+            time.perf_counter() if t is None else t)
+
+    def arrival_rate(self, category: str) -> float:
+        """Estimated submit arrival rate for ``category`` in calls/second,
+        from the recent submit timestamps (0.0 until two arrivals have been
+        seen — no estimate is *no* claim, not a claim of zero traffic; the
+        scheduler treats it as "hold until the deadline says otherwise").
+
+        A burst of simultaneous submits (span ~0) estimates ``inf``:
+        the next arrival is expected immediately, so waiting is free."""
+        ts = self._submits.get(category)
+        if ts is None or len(ts) < 2:
+            return 0.0
+        span = ts[-1] - ts[0]
+        if span <= 0.0:
+            return float("inf")
+        return (len(ts) - 1) / span
 
     # -- recording (called by the executor) ----------------------------------
     def record(self, category: str, backend: str, *, calls: int,
@@ -255,12 +289,18 @@ class RuntimeTelemetry:
                 acc.invocations += st.invocations
                 acc.samples_in += st.samples_in
                 acc.samples_out += st.samples_out
+        for cat, ts in other._submits.items():
+            mine_ts = self._submits[cat]
+            merged = sorted(list(mine_ts) + list(ts))
+            mine_ts.clear()
+            mine_ts.extend(merged[-_ARRIVAL_WINDOW:])
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
     def reset(self) -> None:
         self.stats.clear()
         self.device_stats.clear()
+        self._submits.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0

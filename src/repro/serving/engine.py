@@ -11,14 +11,20 @@ Static shapes: one compilation for prefill (per prompt length bucket) and
 one for decode.  The decode step function is exactly what the decode_32k /
 long_500k dry-run cells lower.
 
-Analog offload (opt-in): pass ``offload=`` a ``repro.runtime`` ``PlanRouter``
-(or bare ``OffloadExecutor``) and attention-adjacent FFT/conv work — e.g.
-spectral retrieval scoring or conv feature extraction riding along with
-generation — can be queued via :meth:`ServingEngine.submit_aux`.  The engine
-flushes the offload queue once per decode step, so aux calls submitted by
-different requests coalesce into batched accelerator invocations (one
-conversion-boundary crossing for the whole step, the paper's §6 lever) and
-the runtime's telemetry observes real serving traffic for re-planning.
+Analog offload (opt-in): pass ``offload=`` a ``repro.runtime``
+``OffloadScheduler``, ``PlanRouter``, or bare ``OffloadExecutor`` and
+attention-adjacent FFT/conv work — e.g. spectral retrieval scoring or conv
+feature extraction riding along with generation — can be queued via
+:meth:`ServingEngine.submit_aux`.  With a scheduler, the decode step runs
+an admission *poll* instead of a forced flush: aux groups may be held open
+across decode steps under the scheduler's deadline, so trickle aux traffic
+accumulates occupancy across steps instead of crossing the conversion
+boundary once per step — continuous batching on both sides of the engine.
+With a plain router/executor the engine keeps the legacy behavior
+(flush once per decode step), which already coalesces aux calls submitted
+by different requests within a step into one boundary crossing (the
+paper's §6 lever).  Either way the runtime's telemetry observes real
+serving traffic for re-planning.
 """
 
 from __future__ import annotations
@@ -63,8 +69,9 @@ class ServingEngine:
         self._decode = jax.jit(self.model.decode_step)
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_len=max_len))
-        # analog-offload hook: a PlanRouter/OffloadExecutor (duck-typed on
-        # submit/flush/pending) or None; aux submissions batch across
+        # analog-offload hook: an OffloadScheduler / PlanRouter /
+        # OffloadExecutor (duck-typed on submit/flush/pending, schedulers
+        # additionally on poll) or None; aux submissions batch across
         # decode steps.
         self.offload = offload
 
@@ -74,9 +81,12 @@ class ServingEngine:
 
     def submit_aux(self, category: str, x: jax.Array, **kwargs):
         """Queue attention-adjacent FFT/conv/matmul work on the offload
-        runtime; returns an ``OffloadResult`` handle that materializes at
-        the next decode step (or on ``handle.get()``).  Requires the engine
-        to have been constructed with ``offload=``."""
+        runtime; returns an ``OffloadResult`` handle.  With a plain
+        router/executor hook it materializes at the next decode step; with
+        an ``OffloadScheduler`` hook it materializes when admission control
+        releases its group (full / deadline / futile — possibly several
+        decode steps later).  ``handle.get()`` always forces it.  Requires
+        the engine to have been constructed with ``offload=``."""
         if self.offload is None:
             raise RuntimeError("engine built without offload= runtime")
         return self.offload.submit(category, x, **kwargs)
@@ -129,10 +139,16 @@ class ServingEngine:
             self.active[slot] = req
 
     def step(self) -> list[Request]:
-        """Admit waiting requests, flush batched aux offload work, then one
-        batched decode step."""
+        """Admit waiting requests, run the aux offload admission pass (a
+        scheduler poll when one is driving — held groups survive the step;
+        a forced flush otherwise), then one batched decode step."""
         self._admit()
-        if self.pending_aux:
+        poll = getattr(self.offload, "poll", None)
+        if poll is not None:
+            # scheduler-driven: release only full/due/futile groups; a
+            # partially filled group rides to the next decode step
+            poll()
+        elif self.pending_aux:
             self.flush_aux()
         if not self.active:
             return []

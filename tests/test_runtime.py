@@ -697,6 +697,86 @@ def test_fidelity_flags_budget_violation():
     assert not checker.all_ok
 
 
+def test_fidelity_vectorized_matches_per_frame_norms():
+    """The batch scores in ONE reduction; the number must equal the worst
+    per-frame ||got-ref|| / ||ref|| a Python loop would compute."""
+    key = jax.random.PRNGKey(2)
+    refs = [jax.random.uniform(jax.random.fold_in(key, i), (8, 8)) + 0.5
+            for i in range(4)]
+    gots = [r + 1e-3 * jax.random.normal(jax.random.fold_in(key, 50 + i),
+                                         (8, 8))
+            for i, r in enumerate(refs)]
+    checker = FidelityChecker()
+    report = checker.check("fft", "optical-sim", gots, refs, enob=8.0)
+    want = max(float(np.linalg.norm(np.asarray(g - r).ravel())
+                     / np.linalg.norm(np.asarray(r).ravel()))
+               for g, r in zip(gots, refs))
+    assert report.rel_err == pytest.approx(want, rel=1e-5)
+    assert report.batch == 4
+
+
+def test_fidelity_zero_norm_reference_frames():
+    """A zero reference reproduced exactly scores 0 (ok); any nonzero
+    output against a zero reference scores inf (always a VIOLATION) —
+    neither divides by zero or reports clamp-denominator garbage."""
+    z = jnp.zeros((4, 4))
+    checker = FidelityChecker()
+    ok = checker.check("fft", "optical-sim", [z], [z], enob=8.0)
+    assert ok.rel_err == 0.0 and ok.ok
+    bad = checker.check("fft", "optical-sim", [jnp.ones((4, 4))], [z],
+                        enob=8.0)
+    assert bad.rel_err == float("inf") and not bad.ok
+    # mixed batch: the zero-norm frame must not mask the fabricated one
+    mixed = checker.check("fft", "optical-sim",
+                          [z, jnp.ones((4, 4))], [z, z], enob=8.0)
+    assert mixed.rel_err == float("inf")
+
+
+def test_fidelity_nonpositive_enob_infinite_bound():
+    """enob <= 0 promises nothing: the budget is infinite and even a
+    garbage result is 'within' it (the gate then never vetoes)."""
+    from repro.core.conversion import enob_error_bound
+    assert enob_error_bound(0.0) == float("inf")
+    assert enob_error_bound(-3.0) == float("inf")
+    checker = FidelityChecker()
+    r = checker.check("fft", "optical-sim", [jnp.ones((4, 4))],
+                      [2.0 * jnp.ones((4, 4))], enob=0.0)
+    assert r.bound == float("inf") and r.ok
+    # ...including the fabricated-signal inf: inf <= inf
+    r2 = checker.check("fft", "optical-sim", [jnp.ones((4, 4))],
+                       [jnp.zeros((4, 4))], enob=-1.0)
+    assert r2.ok
+
+
+def test_fidelity_sample_every_bounds_shadowing():
+    """sample_every=N scores every Nth shadowed batch per category; the
+    skipped batches keep the async pipeline (no forced sync retire)."""
+    (a,) = _imgs(1)
+    checker = FidelityChecker(sample_every=3)
+    ex = OffloadExecutor(dataclasses.replace(LANED_4F, adc=HI_FI_ADC),
+                         fidelity=checker, max_batch=2, pipeline_depth=2)
+    handles = []
+    for _ in range(6):           # 6 flushes -> 6 shadowed-batch candidates
+        h = ex.submit("fft", a)
+        ex.flush_async()
+        handles.append(h)
+    ex.drain()
+    assert len(checker.reports) == 2          # batches 0 and 3 scored
+    assert handles[0].fidelity is not None
+    assert handles[1].fidelity is None        # skipped: no report attached
+    assert handles[3].fidelity is not None
+    with pytest.raises(ValueError):
+        FidelityChecker(sample_every=0)
+
+
+def test_fidelity_sampling_is_per_category():
+    checker = FidelityChecker(sample_every=2)
+    assert checker.should_check("fft")        # fft #0 -> scored
+    assert checker.should_check("conv")       # conv #0 -> scored
+    assert not checker.should_check("fft")    # fft #1 -> skipped
+    assert checker.should_check("fft")        # fft #2 -> scored
+
+
 # --- lazy handles and caches ------------------------------------------------------
 
 def test_result_get_triggers_flush():
