@@ -25,6 +25,13 @@ Three claims, measured on the executing runtime (not just the cost model):
   bounded queueing-delay cost that the modeled wall prices explicitly
   (``StepCost.hold_s``).  Arrivals ride a ``ManualClock``, so the
   admission decisions (and therefore the column) are deterministic.
+* **Large frames: looped vs monolithic vs memory-budgeted tiled** — at
+  512x512 the monolithic (K, H, W) stack blows the LLC off-TPU and
+  batching measurably loses to looping; the memory-budgeted executor
+  streams the group as ``choose_tile``-sized sub-invocations through the
+  two-deep pipeline and beats both.  The row stamps the budget (bytes,
+  source) and asserts the budget-chosen ``tile_k`` is the tile size the
+  executor actually dispatched.
 * **Sharded vs single-device** — scattering the K=16 flush group across n
   replicated simulated accelerators (each paying its own DAC/ADC boundary)
   cuts the modeled invocation wall to max-over-devices + sync: the
@@ -54,14 +61,22 @@ import numpy as np
 from repro.runtime import (
     BATCHED_4F,
     ManualClock,
+    MemoryBudget,
     OffloadExecutor,
     OffloadScheduler,
     PlanRouter,
+    choose_tile,
 )
 
 SHAPE = (128, 128)
 CALLS = 16
 BENCH_JSON = "BENCH_runtime.json"
+
+# Large-frame scenario: the regime where a monolithic (K, H, W) stack
+# falls out of the LLC off-TPU (ROADMAP's last open lever) and the
+# memory budget decides the staging granularity.
+LARGE_SHAPE = (512, 512)
+LARGE_CALLS = 16
 
 # Trickle-arrival scenario: the scheduler config stamped into
 # BENCH_runtime.json so the occupancy trajectory stays interpretable
@@ -192,6 +207,71 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
     return rows
 
 
+def large_frame_comparison(shape: tuple[int, int] = LARGE_SHAPE,
+                           calls: int = LARGE_CALLS) -> dict:
+    """Looped vs monolithic vs memory-budgeted tiled dispatch at 512x512.
+
+    At large frames the monolithic ``(K, H, W)`` stack (in + complex
+    intermediates + out: ~64 MB here) falls out of the CPU's last-level
+    cache off-TPU, so one big batched invocation turns every XLA pass into
+    a DRAM stream — *batching measurably loses to looping*.  The
+    memory-budgeted executor streams the same released group as
+    ``choose_tile``-sized sub-invocations through the two-deep async
+    pipeline instead: amortization per tile, cache-resident working set,
+    staging of tile t+1 overlapped with tile t's in-flight compute.  The
+    row stamps the budget it ran under (bytes, source, reserve) plus the
+    ``tile_k`` the budget chose AND the tile sizes the executor actually
+    dispatched (telemetry), so the acceptance check — chosen == dispatched,
+    tiled wall <= monolithic wall — is auditable from the JSON alone.
+    """
+    imgs = _images(calls, shape)
+    budget = MemoryBudget.detect()
+    plan = choose_tile(shape[0] * shape[1], calls, budget, pipeline_depth=2)
+    out = {
+        "shape": list(shape),
+        "calls": calls,
+        "budget_bytes": budget.bytes_limit,
+        "budget_source": budget.source,
+        "budget_reserve": budget.reserve,
+        "chosen_tile_k": plan.tile_k,
+        "modeled_bytes_per_frame": plan.bytes_per_frame,
+    }
+    regimes = {
+        "looped": dict(max_batch=1, mem_budget=MemoryBudget.unlimited()),
+        "monolithic": dict(max_batch=calls,
+                           mem_budget=MemoryBudget.unlimited()),
+        "tiled": dict(max_batch=calls, mem_budget=budget),
+    }
+    for name, kw in regimes.items():
+        ex = OffloadExecutor(BATCHED_4F, **kw)
+        ex.warm("fft", imgs[0], batch=kw["max_batch"])
+        wall = _timed_flush(ex, imgs)
+        ex.telemetry.reset()
+        handles = [ex.submit("fft", im) for im in imgs]
+        ex.flush()
+        st = ex.telemetry.stats[("fft", "optical-sim")]
+        out[f"{name}_wall_s_per_call"] = wall
+        out[f"{name}_modeled_s_per_call"] = \
+            sum(h.cost.total_s for h in handles) / len(handles)
+        out[f"{name}_invocations"] = st.invocations
+        if name == "tiled":
+            tiles = ex.telemetry.tile_sizes_observed("fft")
+            out["dispatched_tile_sizes"] = {str(k): v
+                                            for k, v in tiles.items()}
+            out["measured_bytes_per_frame"] = \
+                ex.telemetry.bytes_per_frame("fft")
+            # the acceptance link: the budget's pick IS the dispatch depth
+            out["tile_matches_dispatch"] = \
+                bool(tiles) and max(tiles) == plan.tile_k
+    out["tiled_vs_monolithic_speedup"] = \
+        out["monolithic_wall_s_per_call"] / max(out["tiled_wall_s_per_call"],
+                                                1e-12)
+    out["tiled_vs_looped_speedup"] = \
+        out["looped_wall_s_per_call"] / max(out["tiled_wall_s_per_call"],
+                                            1e-12)
+    return out
+
+
 def trickle_comparison(shape: tuple[int, int] = (64, 64),
                        arrivals: int = TRICKLE_ARRIVALS,
                        rate_hz: float = TRICKLE_RATE_HZ,
@@ -320,6 +400,7 @@ def bench_payload() -> dict:
         "pipeline": pipeline_comparison(),
         "sharded": sharded_comparison(),
         "trickle_comparison": trickle_comparison(),
+        "large_frame": large_frame_comparison(),
         "roundtrip": rt,
     }
 
@@ -373,6 +454,17 @@ def run(payload: dict | None = None) -> list[str]:
         f"|hold={1e6 * t['held_hold_s_per_call']:.1f}us"
         f"|rate={t['arrival_rate_hz']:.0f}/s"
         f"|deadline={1e3 * t['deadline_s']:.0f}ms")
+    lf = payload["large_frame"]
+    rows.append(
+        f"runtime,large_frame,{1e6 * lf['tiled_wall_s_per_call']:.1f},"
+        f"tiled_vs_monolithic={lf['tiled_vs_monolithic_speedup']:.2f}x"
+        f"|tiled_vs_looped={lf['tiled_vs_looped_speedup']:.2f}x"
+        f"|monolithic={1e6 * lf['monolithic_wall_s_per_call']:.1f}us"
+        f"|looped={1e6 * lf['looped_wall_s_per_call']:.1f}us"
+        f"|tile_k={lf['chosen_tile_k']}"
+        f"|match={lf['tile_matches_dispatch']}"
+        f"|budget={lf['budget_bytes'] // (1024 * 1024)}MiB"
+        f"({lf['budget_source']})")
     rt = payload["roundtrip"]
     rows.append(
         f"runtime,roundtrip,,speedup={rt['plan_speedup']:.2f}x"

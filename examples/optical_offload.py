@@ -33,6 +33,13 @@ batching story prices it:
                  arrival rate), so occupancy climbs where drain-on-flush
                  would cross the boundary one frame at a time — and the
                  queueing delay that buys it is priced (``StepCost.hold_s``).
+  7. tile      — large frames under a memory budget: at 512x512 the
+                 monolithic stacked flush group overflows the LLC
+                 (VMEM on TPU), so ``replan`` picks a sub-group ``tile_k``
+                 from the detected byte budget and the released group
+                 streams as tile-sized sub-invocations through the same
+                 two-deep pipeline — amortization per tile, cache-resident
+                 working set.
 
 Executors are context managers: each ``with`` block below guarantees no
 pending, held, or in-flight group outlives the demo that created it.
@@ -52,6 +59,7 @@ from repro.runtime import (
     CONV_CAPTURES,
     FidelityChecker,
     ManualClock,
+    MemoryBudget,
     OffloadExecutor,
     OffloadScheduler,
     PlanRouter,
@@ -90,12 +98,18 @@ def main() -> None:
 
     fidelity = FidelityChecker()
     # the executor is a context manager: nothing queued, held, or in
-    # flight survives the block (results materialize, telemetry balances)
+    # flight survives the block (results materialize, telemetry balances).
+    # The budget is pinned to unlimited here: steps 1-4 demonstrate the
+    # full-occupancy amortization story (one monolithic invocation per
+    # group); step 7 below turns the detected budget on and shows what
+    # memory-budgeted tiling changes at this frame size.
     with OffloadExecutor(BATCHED_4F, fidelity=fidelity, max_batch=16,
-                         pipeline_depth=2) as executor:
+                         pipeline_depth=2,
+                         mem_budget=MemoryBudget.unlimited()) as executor:
         run_plan_demo(executor, imgs, kernels)
     run_sharded_demo(imgs, kernels)
     run_trickle_demo()
+    run_tiled_demo(imgs)
 
 
 def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
@@ -158,8 +172,12 @@ def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
 def run_sharded_demo(imgs, kernels) -> None:
     # --- 5. scale out: shard the flush group across replicated apertures ------
     # Photonic systems scale by replicating apertures, not growing one.
+    # unlimited budget: sharding's claim is ONE invocation scattered whole
+    # across the fleet — tiling first would scatter 2-frame tiles over 2
+    # devices each and muddle the comparison (step 7 owns that story)
     with OffloadExecutor(BATCHED_4F, max_batch=16, n_devices=4,
-                         default_backend="sharded") as sharded:
+                         default_backend="sharded",
+                         mem_budget=MemoryBudget.unlimited()) as sharded:
         sharded.warm("conv", imgs[0], kernel=kernels[0], batch=len(imgs))
         handles = [sharded.submit("conv", im, kernel=kernels[0])
                    for im in imgs]
@@ -222,6 +240,58 @@ def run_trickle_demo(rate_hz: float = 200.0, deadline_s: float = 0.05,
               f"boundary {per_call.conversion_s + per_call.interface_s:.4g}s"
               f"/call, hold {per_call.hold_s:.4g}s/call, "
               f"modeled wall {per_call.total_s:.4g}s/call")
+
+
+def run_tiled_demo(imgs) -> None:
+    # --- 7. large frames: memory-budgeted tiled dispatch ----------------------
+    # A 512x512 K=8 flush group's monolithic stack (frames + complex
+    # intermediates + results) falls out of the CPU's last-level cache
+    # off-TPU — the regime where batching measurably loses to looping.
+    # The executor's memory budget (LLC-derived here, VMEM-derived on
+    # TPU) makes replan pick a sub-group tile_k: the released group
+    # streams as budget-sized sub-invocations through the same two-deep
+    # pipeline, each tile's staging overlapped with the previous tile's
+    # in-flight compute.
+    budget = MemoryBudget.detect()
+    print(f"\n-- large frames: memory-budgeted tiled dispatch "
+          f"({budget.bytes_limit // (1024 * 1024)} MiB {budget.source} "
+          f"budget, reserve {budget.reserve:.0%}) --")
+    with OffloadExecutor(BATCHED_4F, max_batch=16,
+                         mem_budget=budget) as ex:
+        router = PlanRouter(ex)              # all-host profiling mode
+        ex.warm("fft", imgs[0], backend="host", batch=len(imgs))
+        ex.telemetry.start()
+        for h in [router.submit("fft", im) for im in imgs]:
+            h.get()
+        ex.telemetry.stop()
+        router.replan()                      # picks (max_batch, n_devices, tile_k)
+        k, _n, t = router.choose_sharding()["fft"]
+        print(f"replan chose max_batch={k}, tile_k={t} for 512x512 fft "
+              f"(monolithic would stage "
+              f"{k * 2 * 512 * 512 * 4 // (1024 * 1024)} MiB + intermediates)")
+        n_in, n_out = ex.telemetry.samples_per_call("fft")
+        mono = BATCHED_4F.batched_step_cost(n_in, n_out, batch=k,
+                                            pipeline_depth=2)
+        tiled = BATCHED_4F.batched_step_cost(n_in, n_out, batch=k,
+                                             pipeline_depth=2, tile_k=t)
+        print(f"modeled invocation wall: tiled {tiled.total_s:.4g}s vs "
+              f"monolithic {mono.total_s:.4g}s — the boundary model prices "
+              f"each tile's own handshake/settle honestly; tiling wins on "
+              f"the MEASURED host wall (cache locality), which is what the "
+              f"benchmark's large_frame row asserts")
+        # drive one group through the simulated engine to show the
+        # dispatch granularity the budget (via replan's set_tile_k)
+        # forced — on fresh telemetry, so the printed tile counts are the
+        # optical dispatches alone, not the host profiling phase's
+        ex.telemetry.reset()
+        ex.warm("fft", imgs[0], batch=len(imgs))
+        for h in [ex.submit("fft", im, backend="optical-sim")
+                  for im in imgs]:
+            h.get()
+        tiles = ex.telemetry.tile_sizes_observed("fft")
+        print(f"dispatched tile sizes (telemetry): {tiles} — measured "
+              f"{ex.telemetry.bytes_per_frame('fft') // 1024} KiB/frame "
+              f"staged")
 
 
 if __name__ == "__main__":

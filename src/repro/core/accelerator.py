@@ -40,9 +40,26 @@ __all__ = [
     "IDEAL_4F",
     "ANDERSON_MVM",
     "SPEED_OF_LIGHT_M_S",
+    "tile_sizes",
 ]
 
 SPEED_OF_LIGHT_M_S = 299_792_458.0
+
+
+def tile_sizes(k: int, tile_k: int) -> list[int]:
+    """Sub-invocation sizes for a K-deep group at ``tile_k`` frames/tile:
+    ``ceil(k / tile_k)`` tiles, the last one ragged when ``tile_k`` does
+    not divide ``k``.  The ONE definition of the split — the runtime's
+    dispatcher/warmer (via ``repro.runtime.tiling``) and both cost models
+    below share it, so the modeled tile stream can never desync from the
+    dispatched one."""
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    tile_k = max(1, min(int(tile_k), k))
+    sizes = [tile_k] * (k // tile_k)
+    if k % tile_k:
+        sizes.append(k % tile_k)
+    return sizes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,11 +187,32 @@ class OpticalFourierAcceleratorSpec:
         return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=interface_s,
                         analog_s=analog_s, host_s=host_s)
 
+    def _batched_sides(self, n_in: int, n_out: int, batch: int,
+                       ) -> tuple[float, float, float, float, float, int]:
+        """Unoverlapped resource totals of ONE invocation carrying
+        ``batch`` inputs on one device: (dac_s, adc_s, intf_in, intf_out,
+        analog_s, frames).  The write side is dac + intf_in; the
+        analog+read side is adc + intf_out + analog.  Shared by the
+        monolithic, tiled, and sharded pricing paths so all three charge
+        identical per-invocation physics."""
+        caps = self.phase_shift_captures
+        frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
+        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
+        adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
+        intf_in = (batch * n_in / self.slm_interface_hz
+                   + frames * self.interface_latency_s)
+        intf_out = caps * batch * n_out / self.camera_interface_hz
+        analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
+                    + self.time_of_flight_s())
+        return dac_s, adc_s, intf_in, intf_out, analog_s, frames
+
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
                           n_devices: int = 1,
-                          hold_s: float = 0.0) -> StepCost:
+                          hold_s: float = 0.0,
+                          tile_k: int | None = None,
+                          mem_budget=None) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
         ``hold_s`` is the queueing delay a continuous-batching scheduler
@@ -203,7 +241,7 @@ class OpticalFourierAcceleratorSpec:
         ``max(write_path, analog + read_path)`` instead of their *sum*; only
         the first write and the last read stick out of the overlap.  The
         returned :class:`StepCost` keeps the slower side whole and charges
-        the faster (hidden) side only its exposed 1/frames prologue share,
+        the faster (hidden) side only its exposed 1/stages prologue share,
         so ``total_s`` equals the pipelined wall clock while the breakdown
         still says which side bounds throughput.  With a single frame there
         is nothing to overlap and the depth is ignored.
@@ -220,6 +258,25 @@ class OpticalFourierAcceleratorSpec:
         device charged to the interface (a group shallower than the fleet
         occupies only ``batch`` devices, matching the runtime's
         ``shard_sizes`` split).
+
+        ``tile_k`` prices *memory-budgeted tiled dispatch* (the runtime's
+        ``choose_tile`` lever): the batch streams as ``ceil(batch /
+        tile_k)`` sub-invocations of at most ``tile_k`` inputs each —
+        exactly how the executor dispatches a group whose monolithic stack
+        would overflow the staging budget.  Every tile pays its OWN
+        per-invocation prologue (frame handshake, settle, exposure,
+        time-of-flight; under sharding, each tile scatters across the
+        devices and re-pays the sync barrier), but with ``pipeline_depth
+        >= 2`` consecutive tiles overlap through the executor's two-deep
+        async pipeline — tile t+1's write path behind tile t's analog+read
+        — so the steady-state wall is max-side over the whole tile stream,
+        with the faster side charged only its exposed prologue share.
+        ``tile_k >= batch`` is exactly the monolithic price; ``tile_k=1``
+        prices the looped regime.  Alternatively pass ``mem_budget`` (any
+        object with a ``tile_for_group(n_in, n_out, k, pipeline_depth=...)``
+        method, e.g. ``repro.runtime.tiling.MemoryBudget``) and the tile
+        depth is derived from the byte budget exactly as the executor
+        derives it — same frame cap, same even-split divisor refinement.
         """
         if n_out is None:
             n_out = n_in
@@ -229,27 +286,30 @@ class OpticalFourierAcceleratorSpec:
             raise ValueError("pipeline_depth must be >= 1")
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
-        if n_devices > 1:
-            eff = min(n_devices, batch)
-            per = self.batched_step_cost(
-                n_in, n_out, batch=math.ceil(batch / eff),
-                host_s=host_s, pipeline_depth=pipeline_depth, hold_s=hold_s)
-            return dataclasses.replace(
-                per, interface_s=per.interface_s
-                + eff * self.device_sync_s)
-        caps = self.phase_shift_captures
-        frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
-        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
-        adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
-        intf_in = (batch * n_in / self.slm_interface_hz
-                   + frames * self.interface_latency_s)
-        intf_out = caps * batch * n_out / self.camera_interface_hz
-        analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
-                    + self.time_of_flight_s())
-        if pipeline_depth >= 2 and frames > 1:
+        if tile_k is None and mem_budget is not None:
+            tile_k = mem_budget.tile_for_group(
+                n_in, n_out, batch, pipeline_depth=pipeline_depth)
+        if tile_k is not None and tile_k < 1:
+            raise ValueError("tile_k must be >= 1")
+        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
+        dac_s = adc_s = intf_in = intf_out = analog_s = sync_s = 0.0
+        stages = 0
+        for b in sizes:
+            eff = min(n_devices, b)
+            d, a, i1, i2, an, fr = self._batched_sides(
+                n_in, n_out, math.ceil(b / eff))
+            dac_s += d
+            adc_s += a
+            intf_in += i1
+            intf_out += i2
+            analog_s += an
+            stages += fr
+            if n_devices > 1:
+                sync_s += eff * self.device_sync_s
+        if pipeline_depth >= 2 and stages > 1:
             write_side = dac_s + intf_in
             read_side = adc_s + intf_out + analog_s
-            hidden = 1.0 / frames  # exposed prologue share of the faster side
+            hidden = 1.0 / stages  # exposed prologue share of the faster side
             if write_side <= read_side:
                 dac_s *= hidden
                 intf_in *= hidden
@@ -258,7 +318,7 @@ class OpticalFourierAcceleratorSpec:
                 intf_out *= hidden
                 analog_s *= hidden
         return StepCost(dac_s=dac_s, adc_s=adc_s,
-                        interface_s=intf_in + intf_out,
+                        interface_s=intf_in + intf_out + sync_s,
                         analog_s=analog_s, host_s=host_s, hold_s=hold_s)
 
     def step_energy_j(self, n_in: int, n_out: int | None = None) -> float:
@@ -303,7 +363,9 @@ class OpticalMVMAcceleratorSpec:
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
                           n_devices: int = 1,
-                          hold_s: float = 0.0) -> StepCost:
+                          hold_s: float = 0.0,
+                          tile_k: int | None = None,
+                          mem_budget=None) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
 
         ``hold_s`` charges continuous-batching queueing delay to the
@@ -313,7 +375,7 @@ class OpticalMVMAcceleratorSpec:
         loads activation set b+1 while set b is in the optical core / ADC,
         so each steady-state stage costs ``max(dac, adc + pass)`` instead
         of their sum.  The hidden (faster) side is charged only its exposed
-        1/batch prologue share — see
+        1/stages prologue share — see
         :meth:`OpticalFourierAcceleratorSpec.batched_step_cost`.
 
         ``n_devices >= 2`` prices sharded execution across replicated MVM
@@ -321,6 +383,16 @@ class OpticalMVMAcceleratorSpec:
         ``ceil(batch / n_devices)`` share through its own converters) plus
         one ``device_sync_s`` per participating device (at most ``batch``
         of them can take a shard).
+
+        ``tile_k`` / ``mem_budget`` price memory-budgeted tiled dispatch,
+        exactly as on the 4f family: the batch streams as ``ceil(batch /
+        tile_k)`` sub-invocations, each paying its own handshake
+        (``interface_latency_s``) and — under sharding — its own per-device
+        sync, with consecutive tiles overlapped two-deep when
+        ``pipeline_depth >= 2``.  ``mem_budget`` duck-types
+        ``tile_for_group(n_in, n_out, k, pipeline_depth=...)``
+        (``repro.runtime.tiling.MemoryBudget``) — the executor's exact
+        resolution, divisor refinement included.
         """
         if n_out is None:
             n_out = n_in
@@ -330,26 +402,32 @@ class OpticalMVMAcceleratorSpec:
             raise ValueError("pipeline_depth must be >= 1")
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
-        if n_devices > 1:
-            eff = min(n_devices, batch)
-            per = self.batched_step_cost(
-                n_in, n_out, batch=math.ceil(batch / eff),
-                host_s=host_s, pipeline_depth=pipeline_depth, hold_s=hold_s)
-            return dataclasses.replace(
-                per, interface_s=per.interface_s
-                + eff * self.device_sync_s)
-        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
-        adc_s = self.adc.time_for(batch * n_out, self.adc_lanes)
-        analog_s = batch * self.optical_pass_s
-        if pipeline_depth >= 2 and batch > 1:
-            hidden = 1.0 / batch
+        if tile_k is None and mem_budget is not None:
+            tile_k = mem_budget.tile_for_group(
+                n_in, n_out, batch, pipeline_depth=pipeline_depth)
+        if tile_k is not None and tile_k < 1:
+            raise ValueError("tile_k must be >= 1")
+        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
+        dac_s = adc_s = analog_s = intf_s = 0.0
+        stages = 0
+        for b in sizes:
+            eff = min(n_devices, b)
+            pb = math.ceil(b / eff)
+            dac_s += self.dac.time_for(pb * n_in, self.dac_lanes)
+            adc_s += self.adc.time_for(pb * n_out, self.adc_lanes)
+            analog_s += pb * self.optical_pass_s
+            intf_s += self.interface_latency_s
+            stages += pb
+            if n_devices > 1:
+                intf_s += eff * self.device_sync_s
+        if pipeline_depth >= 2 and stages > 1:
+            hidden = 1.0 / stages
             if dac_s <= adc_s + analog_s:
                 dac_s *= hidden
             else:
                 adc_s *= hidden
                 analog_s *= hidden
-        return StepCost(dac_s=dac_s, adc_s=adc_s,
-                        interface_s=self.interface_latency_s,
+        return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=intf_s,
                         analog_s=analog_s, host_s=host_s, hold_s=hold_s)
 
     def matmul_cost(self, m: int, k: int, n: int) -> StepCost:

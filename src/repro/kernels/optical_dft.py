@@ -120,7 +120,7 @@ def dft_stage1(wr: jax.Array, wi: jax.Array, a: jax.Array, *,
 
 
 def _stage1_batched_kernel(wr_ref, wi_ref, a_ref, tr_ref, ti_ref, acc_r, acc_i,
-                           *, levels: int, nk: int):
+                           *, levels: int, nk: int, bb: int):
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -128,24 +128,27 @@ def _stage1_batched_kernel(wr_ref, wi_ref, a_ref, tr_ref, ti_ref, acc_r, acc_i,
         acc_r[...] = jnp.zeros_like(acc_r)
         acc_i[...] = jnp.zeros_like(acc_i)
 
-    a = a_ref[0].astype(jnp.float32)
-    if levels > 0:  # fused DAC quantization (SLM drive resolution)
-        a = jnp.round(jnp.clip(a, 0.0, 1.0) * levels) / levels
-    acc_r[...] += jnp.dot(wr_ref[...].astype(jnp.float32), a,
-                          preferred_element_type=jnp.float32)
-    acc_i[...] += jnp.dot(wi_ref[...].astype(jnp.float32), a,
-                          preferred_element_type=jnp.float32)
+    wr = wr_ref[...].astype(jnp.float32)
+    wi = wi_ref[...].astype(jnp.float32)
+    for b in range(bb):  # bb frames share one load of the factor blocks
+        a = a_ref[b].astype(jnp.float32)
+        if levels > 0:  # fused DAC quantization (SLM drive resolution)
+            a = jnp.round(jnp.clip(a, 0.0, 1.0) * levels) / levels
+        acc_r[b] += jnp.dot(wr, a, preferred_element_type=jnp.float32)
+        acc_i[b] += jnp.dot(wi, a, preferred_element_type=jnp.float32)
 
     @pl.when(k == nk - 1)
     def _flush():
-        tr_ref[0] = acc_r[...].astype(tr_ref.dtype)
-        ti_ref[0] = acc_i[...].astype(ti_ref.dtype)
+        for b in range(bb):
+            tr_ref[b] = acc_r[b].astype(tr_ref.dtype)
+            ti_ref[b] = acc_i[b].astype(ti_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("dac_bits", "bm", "bk", "bn"))
+@functools.partial(jax.jit, static_argnames=("dac_bits", "bb", "bm", "bk",
+                                             "bn"))
 def dft_stage1_batched(wr: jax.Array, wi: jax.Array, a: jax.Array, *,
-                       dac_bits: int = 0, bm: int = 128, bk: int = 128,
-                       bn: int = 128):
+                       dac_bits: int = 0, bb: int = 1, bm: int = 128,
+                       bk: int = 128, bn: int = 128):
     """T[b] = W @ quantize_dac(A[b]) for a whole batch in ONE kernel launch.
 
     W: (m, k) complex as (wr, wi); A: (batch, k, n) real.  The batch rides
@@ -154,34 +157,41 @@ def dft_stage1_batched(wr: jax.Array, wi: jax.Array, a: jax.Array, *,
     across the batch — their BlockSpec index map ignores the batch index,
     which is exactly the aperture-packing story of the runtime's batched
     boundary crossing (K frames, one launch, shared optics).
+
+    Block sizes are caller-driven (the runtime derives them from the VMEM
+    budget — ``repro.runtime.tiling.choose_blocks``): ``bb`` frames ride
+    each grid step and share one load of the W blocks, ``bm/bk/bn`` tile
+    the matmul itself.
     """
     batch, kdim, n = a.shape
     m, _ = wr.shape
+    bb = pick_block(batch, bb, 1)
     bm = pick_block(m, bm, 8)
     bk = pick_block(kdim, bk, 128)
     bn = pick_block(n, bn, 128)
-    grid = (batch, m // bm, n // bn, kdim // bk)
+    grid = (batch // bb, m // bm, n // bn, kdim // bk)
     levels = (1 << dac_bits) - 1 if dac_bits else 0
-    kern = functools.partial(_stage1_batched_kernel, levels=levels, nk=grid[3])
+    kern = functools.partial(_stage1_batched_kernel, levels=levels,
+                             nk=grid[3], bb=bb)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda b, i, j, k: (i, k)),      # W re
             pl.BlockSpec((bm, bk), lambda b, i, j, k: (i, k)),      # W im
-            pl.BlockSpec((1, bk, bn), lambda b, i, j, k: (b, k, j)),  # A
+            pl.BlockSpec((bb, bk, bn), lambda b, i, j, k: (b, k, j)),  # A
         ],
         out_specs=[
-            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
-            pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+            pl.BlockSpec((bb, bm, bn), lambda b, i, j, k: (b, i, j)),
+            pl.BlockSpec((bb, bm, bn), lambda b, i, j, k: (b, i, j)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((batch, m, n), jnp.float32),
             jax.ShapeDtypeStruct((batch, m, n), jnp.float32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bb, bm, bn), jnp.float32),
+            pltpu.VMEM((bb, bm, bn), jnp.float32),
         ],
         interpret=INTERPRET,
     )(wr, wi, a)
@@ -248,7 +258,7 @@ def dft_stage2(tr: jax.Array, ti: jax.Array, wr: jax.Array, wi: jax.Array, *,
 
 
 def _stage2_batched_kernel(tr_ref, ti_ref, wr_ref, wi_ref, out_ref,
-                           acc_r, acc_i, *, nk: int):
+                           acc_r, acc_i, *, nk: int, bb: int):
     k = pl.program_id(3)
 
     @pl.when(k == 0)
@@ -256,51 +266,56 @@ def _stage2_batched_kernel(tr_ref, ti_ref, wr_ref, wi_ref, out_ref,
         acc_r[...] = jnp.zeros_like(acc_r)
         acc_i[...] = jnp.zeros_like(acc_i)
 
-    tr = tr_ref[0].astype(jnp.float32)
-    ti = ti_ref[0].astype(jnp.float32)
     wr = wr_ref[...].astype(jnp.float32)
     wi = wi_ref[...].astype(jnp.float32)
     dot_t = lambda x, w: jax.lax.dot_general(
         x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    acc_r[...] += dot_t(tr, wr) - dot_t(ti, wi)
-    acc_i[...] += dot_t(tr, wi) + dot_t(ti, wr)
+    for b in range(bb):  # bb frames share one load of the factor blocks
+        tr = tr_ref[b].astype(jnp.float32)
+        ti = ti_ref[b].astype(jnp.float32)
+        acc_r[b] += dot_t(tr, wr) - dot_t(ti, wi)
+        acc_i[b] += dot_t(tr, wi) + dot_t(ti, wr)
 
     @pl.when(k == nk - 1)
     def _detector():  # fused square-law camera
-        out_ref[0] = (acc_r[...] ** 2 + acc_i[...] ** 2).astype(out_ref.dtype)
+        for b in range(bb):
+            out_ref[b] = (acc_r[b] ** 2 + acc_i[b] ** 2).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+@functools.partial(jax.jit, static_argnames=("bb", "bm", "bk", "bn"))
 def dft_stage2_batched(tr: jax.Array, ti: jax.Array, wr: jax.Array,
-                       wi: jax.Array, *, bm: int = 128, bk: int = 128,
-                       bn: int = 128):
+                       wi: jax.Array, *, bb: int = 1, bm: int = 128,
+                       bk: int = 128, bn: int = 128):
     """I[b] = |T[b] @ W^T|^2 for a whole batch in ONE kernel launch.
 
     T: (batch, m, k) complex as (tr, ti); W: (n, k) complex; I: (batch, m, n).
-    Like :func:`dft_stage1_batched`, the batch is the first grid axis and
-    the W factor blocks are shared across it.
+    Like :func:`dft_stage1_batched`, the batch is the first grid axis, the
+    W factor blocks are shared across it, and the block sizes (``bb``
+    frames per grid step, ``bm/bk/bn`` matmul tiles) are caller-driven —
+    the runtime derives them from the VMEM budget.
     """
     batch, m, kdim = tr.shape
     n, _ = wr.shape
+    bb = pick_block(batch, bb, 1)
     bm = pick_block(m, bm, 8)
     bk = pick_block(kdim, bk, 128)
     bn = pick_block(n, bn, 128)
-    grid = (batch, m // bm, n // bn, kdim // bk)
-    kern = functools.partial(_stage2_batched_kernel, nk=grid[3])
+    grid = (batch // bb, m // bm, n // bn, kdim // bk)
+    kern = functools.partial(_stage2_batched_kernel, nk=grid[3], bb=bb)
     return pl.pallas_call(
         kern,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),  # T re
-            pl.BlockSpec((1, bm, bk), lambda b, i, j, k: (b, i, k)),  # T im
+            pl.BlockSpec((bb, bm, bk), lambda b, i, j, k: (b, i, k)),  # T re
+            pl.BlockSpec((bb, bm, bk), lambda b, i, j, k: (b, i, k)),  # T im
             pl.BlockSpec((bn, bk), lambda b, i, j, k: (j, k)),        # W re
             pl.BlockSpec((bn, bk), lambda b, i, j, k: (j, k)),        # W im
         ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda b, i, j, k: (b, i, j)),
+        out_specs=pl.BlockSpec((bb, bm, bn), lambda b, i, j, k: (b, i, j)),
         out_shape=jax.ShapeDtypeStruct((batch, m, n), jnp.float32),
         scratch_shapes=[
-            pltpu.VMEM((bm, bn), jnp.float32),
-            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bb, bm, bn), jnp.float32),
+            pltpu.VMEM((bb, bm, bn), jnp.float32),
         ],
         interpret=INTERPRET,
     )(tr, ti, wr, wi)
@@ -335,7 +350,7 @@ def _dft2_intensity_batched_xla(a: jax.Array, *, dac_bits: int) -> jax.Array:
 
 
 def optical_dft2_intensity_batched(a: jax.Array, *, dac_bits: int = 8,
-                                   block: int = 128,
+                                   block: int = 128, bb: int = 1,
                                    use_pallas: bool | None = None) -> jax.Array:
     """Batched fused pipeline: ``a`` is (batch, h, w), output (batch, h, w).
 
@@ -357,6 +372,7 @@ def optical_dft2_intensity_batched(a: jax.Array, *, dac_bits: int = 8,
     _, h, w = a.shape
     whr, whi = dft_matrix_factors(h)
     wwr, wwi = dft_matrix_factors(w)
-    tr, ti = dft_stage1_batched(whr, whi, a, dac_bits=dac_bits,
+    tr, ti = dft_stage1_batched(whr, whi, a, dac_bits=dac_bits, bb=bb,
                                 bm=block, bk=block, bn=block)
-    return dft_stage2_batched(tr, ti, wwr, wwi, bm=block, bk=block, bn=block)
+    return dft_stage2_batched(tr, ti, wwr, wwi, bb=bb, bm=block, bk=block,
+                              bn=block)

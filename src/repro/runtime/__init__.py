@@ -51,13 +51,24 @@ that runs it.  Module map:
                frame tiles onto multiple apertures with overlap-save halos
                for conv) — with mesh-aware device placement and an
                off-mesh sequential fallback (CPU tests).
+  tiling     — ``MemoryBudget`` / ``choose_tile`` / ``choose_blocks``:
+               memory-budgeted tiled dispatch.  A released flush group
+               whose monolithic ``(K, H, W)`` stack would overflow the
+               per-device staging budget (VMEM-derived on TPU,
+               LLC-derived off it) streams as ``ceil(K / tile_k)``
+               sub-invocations through the same two-deep pipeline
+               (write/analog/read overlap between tiles), and the batched
+               Pallas DFT grid's block sizes are derived from the same
+               budget.  ``tile_k=1`` degenerates to looped, ``>= K`` to
+               monolithic — the runtime-equivalence invariant covers all
+               three.
   router     — ``PlanRouter``: applies an ``OffloadPlan``'s decisions as a
                category->backend routing table and closes the
                profile -> plan -> execute -> re-profile loop via ``replan``
-               — adaptively: each category's ``max_batch`` AND sharded
-               ``n_devices`` are picked from observed telemetry (occupancy,
-               per-call boundary traffic) under an optional latency
-               ``deadline_s``.
+               — adaptively: each category's ``max_batch``, sharded
+               ``n_devices`` AND memory-budgeted ``tile_k`` are picked
+               from observed telemetry (occupancy, per-call boundary
+               traffic) under an optional latency ``deadline_s``.
   specs      — shared demo design points (``BATCHED_4F``: upgraded
                peripherals + frame latency that only batching amortizes).
 
@@ -91,6 +102,14 @@ from repro.runtime.scheduler import ManualClock, OffloadScheduler
 from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
 from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
 from repro.runtime.telemetry import BackendStats, DeviceStats, RuntimeTelemetry
+from repro.runtime.tiling import (
+    BlockPlan,
+    MemoryBudget,
+    TilePlan,
+    choose_blocks,
+    choose_tile,
+    tile_sizes,
+)
 
 __all__ = [
     "CATEGORIES",
@@ -117,6 +136,12 @@ __all__ = [
     "BackendStats",
     "DeviceStats",
     "RuntimeTelemetry",
+    "BlockPlan",
+    "MemoryBudget",
+    "TilePlan",
+    "choose_blocks",
+    "choose_tile",
+    "tile_sizes",
     "BATCHED_4F",
     "CAMERA_ADC",
     "SLM_DAC",

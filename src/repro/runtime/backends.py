@@ -71,6 +71,7 @@ from repro.kernels.optical_dft import (
     dft_stage1_batched,
     dft_stage2_batched,
 )
+from repro.runtime.tiling import BlockPlan, MemoryBudget, choose_blocks
 
 __all__ = [
     "CATEGORIES",
@@ -96,8 +97,10 @@ CONV_CAPTURES = 4
 @dataclasses.dataclass
 class BackendContext:
     """Per-executor state shared with backends: the accelerator spec plus
-    the shape-keyed caches (DFT factor matrices, Fourier-plane masks).
-    Compiled kernels are cached by jit itself, keyed on the same shapes.
+    the shape-keyed caches (DFT factor matrices, Fourier-plane masks,
+    resolved Pallas block plans).  Compiled kernels are cached by jit
+    itself, keyed on the same shapes *and* block sizes (the block sizes
+    are jit-static), so a replanned layout always compiles fresh.
 
     ``pipeline_depth`` is how deep the owning executor double-buffers
     boundary crossings; analog backends thread it into
@@ -110,25 +113,61 @@ class BackendContext:
     per-category effective count here before every dispatch — and before
     ``warm`` — so sharded dispatch shapes are primed consistently);
     ``shard_mode`` picks between group sharding, frame sharding, and the
-    automatic policy (see ``repro.runtime.sharded``)."""
+    automatic policy (see ``repro.runtime.sharded``).
+
+    ``mem_budget`` is the per-device staging byte budget
+    (``repro.runtime.tiling.MemoryBudget``): the executor tiles flush
+    groups against it, and the optical backend derives the batched Pallas
+    grid's block sizes from it (``blocks_for``)."""
 
     spec: OpticalFourierAcceleratorSpec | OpticalMVMAcceleratorSpec
-    factor_cache: dict[int, tuple[jax.Array, jax.Array]] = \
+    factor_cache: dict[tuple, tuple[jax.Array, jax.Array]] = \
         dataclasses.field(default_factory=dict)
     mask_cache: dict[tuple, jax.Array] = dataclasses.field(default_factory=dict)
     pipeline_depth: int = 2
     n_devices: int = 1
     shard_mode: str = "auto"
+    mem_budget: "MemoryBudget | None" = None
+    block_cache: dict[tuple, "BlockPlan"] = \
+        dataclasses.field(default_factory=dict)
     _digest_memo: dict[int, tuple[jax.Array, tuple]] = \
         dataclasses.field(default_factory=dict)
 
-    def factors(self, n: int) -> tuple[jax.Array, jax.Array]:
+    def blocks_for(self, batch: int, h: int, w: int) -> "BlockPlan":
+        """Resolved Pallas block sizes for a ``(batch, h, w)`` stacked DFT
+        invocation, derived from the VMEM budget (``choose_blocks``).
+
+        Keyed by the stack shape AND the budget's identity: replanning
+        ``tile_k`` changes the dispatched stack depth, and an operator
+        swapping the budget changes the blocks — either way the resolution
+        must be fresh, never a stale plan shaped for the old layout."""
+        budget = self.mem_budget
+        key = (batch, h, w,
+               None if budget is None else (budget.bytes_limit,
+                                            budget.reserve))
+        if key not in self.block_cache:
+            self.block_cache[key] = choose_blocks(batch, h, w, w, budget)
+        return self.block_cache[key]
+
+    def factors(self, n: int,
+                blocks: tuple = ()) -> tuple[jax.Array, jax.Array]:
         # Computed from host constants, so the cached matrices stay
         # *uncommitted*: jit moves them to whatever device a (possibly
-        # sharded, committed) operand pins the computation to.
-        if n not in self.factor_cache:
-            self.factor_cache[n] = dft_matrix_factors(n)
-        return self.factor_cache[n]
+        # sharded, committed) operand pins the computation to.  The key
+        # carries the resolved block signature the matrices will be tiled
+        # under: a replan that changes tile_k (hence the stack depth,
+        # hence the budget-derived blocks) must never pair a freshly
+        # compiled kernel with factors cached under the old layout — the
+        # kernel jit-specializes on the block sizes, and keying the
+        # factors identically keeps one cache entry per compiled layout.
+        # The matrix *values* depend only on n, so layout entries alias
+        # one shared pair (built once under the bare (n,) key) instead of
+        # recomputing and holding duplicate O(n^2) arrays per layout.
+        key = (n,) + tuple(blocks)
+        if key not in self.factor_cache:
+            base = self.factor_cache.setdefault((n,), dft_matrix_factors(n))
+            self.factor_cache[key] = base
+        return self.factor_cache[key]
 
     def content_key(self, kernel: jax.Array) -> tuple:
         """Content key of an operand: shape, dtype, SHA1 of the bytes.
@@ -310,12 +349,19 @@ class OpticalSimBackend(ExecutionBackend):
             intensity = _dft2_intensity_batched_xla(
                 stack, dac_bits=ctx.spec.dac.bits)
         else:
-            _, h, w = stack.shape
-            whr, whi = ctx.factors(h)
-            wwr, wwi = ctx.factors(w)
+            batch, h, w = stack.shape
+            # block sizes come from the VMEM budget, not fixed defaults;
+            # factors are cached per resolved layout (see ctx.factors)
+            plan = ctx.blocks_for(batch, h, w)
+            whr, whi = ctx.factors(h, plan.key)
+            wwr, wwi = ctx.factors(w, plan.key)
             tr, ti = dft_stage1_batched(whr, whi, stack,
-                                        dac_bits=ctx.spec.dac.bits)
-            intensity = dft_stage2_batched(tr, ti, wwr, wwi)
+                                        dac_bits=ctx.spec.dac.bits,
+                                        bb=plan.bb, bm=plan.bm,
+                                        bk=plan.bk, bn=plan.bn)
+            intensity = dft_stage2_batched(tr, ti, wwr, wwi, bb=plan.bb,
+                                           bm=plan.bm, bk=plan.bk,
+                                           bn=plan.bn)
         return adc_quantize_batched(intensity, ctx.spec.adc.bits)
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):

@@ -63,6 +63,7 @@ from repro.runtime.backends import (
 )
 from repro.runtime.fidelity import FidelityChecker, FidelityReport
 from repro.runtime.telemetry import RuntimeTelemetry
+from repro.runtime.tiling import MemoryBudget, choose_tile, tile_sizes
 
 __all__ = ["OffloadResult", "OffloadExecutor"]
 
@@ -194,6 +195,17 @@ class OffloadExecutor:
         coalescing depth.
       shard_mode: the sharded backend's split policy (``auto`` / ``group``
         / ``frame`` — see ``repro.runtime.sharded``).
+      mem_budget: per-device staging byte budget
+        (:class:`~repro.runtime.tiling.MemoryBudget`).  ``None`` (default)
+        auto-detects: VMEM-derived on TPU, LLC-derived off it.  A released
+        group whose monolithic ``(K, H, W)`` stack would overflow the
+        budget streams as ``ceil(K / tile_k)`` budget-sized sub-invocations
+        through the two-deep pipeline instead (``choose_tile``); pass
+        ``MemoryBudget.unlimited()`` to restore monolithic dispatch.
+      tile_k: explicit frames-per-tile override (global; per-category
+        overrides via ``set_tile_k``).  ``None`` derives it from
+        ``mem_budget`` per released group — small frames never tile, a
+        512x512 K=16 group streams in budget-sized chunks.
       clock: timebase for submission timestamps, hold accounting, and the
         telemetry arrival-rate estimate (``time.perf_counter`` by default;
         tests and benchmarks inject a manual clock for deterministic
@@ -214,6 +226,8 @@ class OffloadExecutor:
                  pipeline_depth: int = 2,
                  n_devices: int = 1,
                  shard_mode: str = "auto",
+                 mem_budget: MemoryBudget | None = None,
+                 tile_k: int | None = None,
                  clock: Callable[[], float] = time.perf_counter) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -223,16 +237,24 @@ class OffloadExecutor:
             raise ValueError("n_devices must be >= 1")
         if shard_mode not in ("auto", "group", "frame"):
             raise ValueError("shard_mode must be 'auto', 'group' or 'frame'")
+        if tile_k is not None and tile_k < 1:
+            raise ValueError("tile_k must be >= 1")
+        if mem_budget is None:
+            mem_budget = MemoryBudget.detect()
         self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth,
-                                  n_devices=n_devices, shard_mode=shard_mode)
+                                  n_devices=n_devices, shard_mode=shard_mode,
+                                  mem_budget=mem_budget)
         self.default_backend = default_backend
         self.telemetry = telemetry or RuntimeTelemetry()
         self.fidelity = fidelity
         self.max_batch = max_batch
         self.pipeline_depth = pipeline_depth
         self.n_devices = n_devices
+        self.mem_budget = mem_budget
+        self.tile_k = tile_k
         self._category_max_batch: dict[str, int] = {}
         self._category_n_devices: dict[str, int] = {}
+        self._category_tile_k: dict[str, int] = {}
         self._clock = clock
         self._queue: list[_Pending] = []
         self._inflight: collections.deque[_Inflight] = collections.deque()
@@ -279,6 +301,41 @@ class OffloadExecutor:
 
     def category_n_devices(self) -> Mapping[str, int]:
         return dict(self._category_n_devices)
+
+    # -- per-category tile depth (memory-budgeted dispatch) --------------------
+    def set_tile_k(self, category: str, t: int) -> None:
+        """Pin ``category``'s frames-per-tile (the adaptive hook
+        ``PlanRouter.replan`` drives alongside ``set_max_batch`` /
+        ``set_n_devices``).  Overrides the budget-derived choice."""
+        if t < 1:
+            raise ValueError("tile_k must be >= 1")
+        self._category_tile_k[category] = t
+
+    def category_tile_ks(self) -> Mapping[str, int]:
+        return dict(self._category_tile_k)
+
+    def resolve_tile_k(self, category: str, x: jax.Array, depth: int, *,
+                       weights: jax.Array | None = None) -> int:
+        """Frames per sub-invocation for a ``depth``-deep released run of
+        ``x``-shaped calls: the per-category pin, the global ``tile_k``
+        override, or — when neither is set — :func:`choose_tile` against
+        the memory budget.  This is the ONE resolution path; ``warm``,
+        dispatch, and (via the same ``choose_tile``) the router's
+        ``choose_sharding`` all go through it, so the stack shapes primed
+        are exactly the stack shapes flushed and the planned tile is the
+        dispatched tile.  The per-call output size enters the working-set
+        model too — a matmul's result footprint is set by the weights'
+        trailing dim, not the operand's."""
+        t = self._category_tile_k.get(category, self.tile_k)
+        if t is None:
+            n_out = (int(x.shape[0]) * int(weights.shape[-1])
+                     if category == "matmul" and weights is not None
+                     else int(x.size))
+            t = choose_tile(int(x.size), depth, self.mem_budget,
+                            n_out=n_out,
+                            dtype_bytes=max(1, x.dtype.itemsize),
+                            pipeline_depth=self.pipeline_depth).tile_k
+        return max(1, min(int(t), depth))
 
     def _backend(self, name: str) -> ExecutionBackend:
         if name not in self._backends:
@@ -349,13 +406,18 @@ class OffloadExecutor:
 
         Batched execution compiles per *stacked* shape, so priming only the
         single-item shape would leave the first real flush paying the
-        batched compile.  This warms both the single-item ``(1, ...)``
-        stack and the ``(batch, ...)`` stack the flusher will actually
+        batched compile.  This warms the single-item ``(1, ...)`` stack
+        plus every stack shape a ``batch``-deep release would actually
         dispatch (``batch`` defaults to the category's effective
-        ``max_batch`` ceiling).  A ragged tail chunk (K % max_batch calls)
-        is a shape of its own and still compiles on first encounter — call
-        ``warm`` again with ``batch=tail`` when the tail size is known and
-        the measurement window cannot tolerate it.
+        ``max_batch`` ceiling).  Under memory-budgeted tiling that is NOT
+        one ``(batch, ...)`` stack: the release streams as
+        ``tile_k``-sized sub-invocations (plus a ragged tail tile), and
+        ``warm`` resolves ``tile_k`` through the same
+        :meth:`resolve_tile_k` path dispatch uses — same budget, same
+        per-category pins — so the first tiled flush pays no compile.  A
+        ragged group tail (K % max_batch calls) still compiles on first
+        encounter — call ``warm`` again with ``batch=tail`` when the tail
+        size is known and the measurement window cannot tolerate it.
 
         Sharded dispatch shapes are primed too: the per-category device
         count is written into the context exactly as ``flush`` does it, so
@@ -372,7 +434,8 @@ class OffloadExecutor:
         if batch < 1:
             raise ValueError("batch must be >= 1")
         self.ctx.n_devices = self.n_devices_for(category)
-        for b in sorted({1, batch}):
+        tile = self.resolve_tile_k(category, x, batch, weights=weights)
+        for b in sorted({1} | set(tile_sizes(batch, tile))):
             outs, _ = be.run(category, [x] * b, self.ctx,
                              kernel=kernel, weights=weights)
             _block(outs)
@@ -418,9 +481,12 @@ class OffloadExecutor:
         This is the primitive the :class:`OffloadScheduler` drives:
         ``flush_async`` is simply "release every group whole".  Each
         released run of members dispatches as ceil(n / max_batch) batched
-        invocations through the async pipeline; hold time (dispatch minus
-        oldest member's submit) is priced into the invocation when a
-        scheduler is attached.
+        chunks through the async pipeline — and each chunk, when its
+        monolithic stack would overflow the memory budget, streams as
+        ceil(chunk / tile_k) tiled sub-invocations (see
+        :meth:`resolve_tile_k`) that double-buffer against each other.
+        Hold time (dispatch minus oldest member's submit) is priced into
+        each invocation when a scheduler is attached.
         """
         members = [p for p in self._queue if p.group_key() == key]
         if count is not None:
@@ -482,6 +548,28 @@ class OffloadExecutor:
             self._retire(self._inflight.popleft())
 
     def _dispatch_async(self, chunk: list[_Pending]) -> None:
+        """Dispatch one released chunk, tiled against the memory budget.
+
+        A chunk whose monolithic ``(K, H, W)`` stack fits the staging
+        budget dispatches whole (one batched invocation, the classic
+        path).  A chunk that would overflow it streams as
+        ``ceil(K / tile_k)`` sub-invocations instead — each a full batched
+        invocation of its own (stacked operands, one backend dispatch,
+        optionally sharded across devices) fed through the SAME two-deep
+        async pipeline, so tile t+1's host-side staging and DAC-prep
+        overlap tile t's in-flight analog+read compute.  ``tile_k = 1``
+        degenerates to the looped regime, ``tile_k >= K`` to the
+        monolithic one.
+        """
+        head = chunk[0]
+        tile = self.resolve_tile_k(head.category, head.x, len(chunk),
+                                   weights=head.weights)
+        start = 0
+        for size in tile_sizes(len(chunk), tile):
+            self._dispatch_invocation(chunk[start:start + size])
+            start += size
+
+    def _dispatch_invocation(self, chunk: list[_Pending]) -> None:
         # Keep at most pipeline_depth invocations in flight: retiring here
         # is what makes the pipeline two-deep rather than unbounded (frame
         # buffers are finite), and it blocks on the *oldest* invocation
@@ -555,10 +643,15 @@ class OffloadExecutor:
         batch = len(f.chunk)
         samples_in = sum(int(p.x.size) for p in f.chunk)
         samples_out = sum(int(o.size) for o in f.outs)
+        bytes_in = sum(int(getattr(p.x, "nbytes", p.x.size * 4))
+                       for p in f.chunk)
+        bytes_out = sum(int(getattr(o, "nbytes", o.size * 4))
+                        for o in f.outs)
         self.telemetry.record(
             f.chunk[0].category, f.be.name, calls=batch,
             samples_in=samples_in, samples_out=samples_out, wall_s=wall,
-            modeled=f.modeled, per_device=f.device_samples)
+            modeled=f.modeled, per_device=f.device_samples,
+            bytes_in=bytes_in, bytes_out=bytes_out)
         report = None
         if f.shadow:
             t1 = time.perf_counter()

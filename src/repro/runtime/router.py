@@ -50,6 +50,8 @@ class PlanRouter:
         self._router_set: dict[str, int] = {}
         self._operator_dev_caps: dict[str, int] = {}
         self._router_set_dev: dict[str, int] = {}
+        self._operator_tile_caps: dict[str, int] = {}
+        self._router_set_tile: dict[str, int] = {}
         if plan is not None:
             self.apply(plan)
 
@@ -90,42 +92,65 @@ class PlanRouter:
     def pending(self) -> int:
         return self.executor.pending
 
-    # -- adaptive batching + device fan-out ------------------------------------
+    # -- adaptive batching + device fan-out + tile depth -----------------------
     def choose_sharding(self, deadline_s: float | None = None,
-                        ) -> dict[str, tuple[int, int]]:
-        """Pick per-category ``(max_batch, n_devices)`` from measured
-        telemetry.
+                        ) -> dict[str, tuple[int, int, int]]:
+        """Pick per-category ``(max_batch, n_devices, tile_k)`` from
+        measured telemetry.
 
         The amortization side of the trade wants the deepest batch the
         executor allows (every coalesced call shares the handshake, settle,
         and lane-ceil residue); the latency side caps it: with a
         ``deadline_s``, the modeled batched invocation — priced from the
         category's *observed* per-call boundary traffic at the executor's
-        pipeline depth AND its sharded device fan-out (max-over-devices
-        plus sync) — must still finish within the deadline, so the depth is
-        halved until it fits.  Categories with no recorded traffic are left
-        at the executor's global ceilings.
+        pipeline depth, its sharded device fan-out (max-over-devices plus
+        sync) AND its memory-budgeted tile depth (each tile pays its own
+        prologue, tiles overlap two-deep) — must still finish within the
+        deadline, so the depth is halved until it fits.  Categories with no
+        recorded traffic are left at the executor's global ceilings.
 
-        The device count rides the batch: group sharding can never use more
-        devices than the group has items, so ``n = min(device cap, k)`` —
-        which makes BOTH chosen values monotone non-increasing as the
-        deadline tightens (the halving sequence is fixed, so a smaller
-        deadline only ever stops it later).
+        The device count rides the batch (group sharding can never use
+        more devices than the group has items: ``n = min(device cap, k)``)
+        and the tile depth rides both: ``tile_k`` is what
+        :func:`~repro.runtime.tiling.choose_tile` picks for a ``k``-deep
+        group of the category's observed frame size under the executor's
+        budget — the SAME resolution dispatch uses, so the chosen tile is
+        the dispatched tile.  The chosen ``max_batch`` and ``n_devices``
+        are monotone non-increasing as the deadline tightens (the halving
+        sequence is fixed, so a smaller deadline only ever stops it
+        later); ``tile_k`` never exceeds the chosen batch or the budget's
+        frame cap, but its even-split refinement may legitimately pick a
+        *larger* divisor at a smaller batch (a 6-deep group tiles 3+3
+        where a 16-deep one tiles 2x8 under the same cap).
 
         Per-category ceilings the *operator* set directly
-        (``executor.set_max_batch`` / ``executor.set_n_devices``) are upper
-        bounds the adaptive choice never exceeds; ceilings this router
+        (``executor.set_max_batch`` / ``set_n_devices`` / ``set_tile_k``)
+        are bounds the adaptive choice never exceeds; ceilings this router
         itself installed are re-derived from scratch on each call (so
         relaxing a deadline raises them again, up to the operator's bound
         where one exists).
         """
+        from repro.runtime.tiling import choose_tile
+
         ex, telemetry = self.executor, self.executor.telemetry
         spec = ex.spec
-        chosen: dict[str, tuple[int, int]] = {}
+        chosen: dict[str, tuple[int, int, int]] = {}
         for cat in telemetry.categories():
             k = min(ex.max_batch, self._operator_bound(cat))
             n_cap = min(ex.n_devices, self._operator_device_bound(cat))
+            tile_cap = self._operator_tile_bound(cat)
             n_in, n_out = telemetry.samples_per_call(cat)
+
+            def tile_for(depth: int) -> int:
+                if n_in <= 0:
+                    return depth
+                t = choose_tile(n_in, depth, ex.mem_budget,
+                                n_out=n_out or None,
+                                pipeline_depth=ex.pipeline_depth).tile_k
+                if tile_cap is not None:
+                    t = min(t, tile_cap)
+                return max(1, min(t, depth))
+
             if (deadline_s is not None and n_in > 0
                     and hasattr(spec, "batched_step_cost")):
                 pricing_spec = spec
@@ -139,15 +164,17 @@ class PlanRouter:
                         n_in, n_out or None, batch=k,
                         pipeline_depth=ex.pipeline_depth,
                         n_devices=max(1, min(n_cap, k)),
+                        tile_k=tile_for(k),
                         ).total_s > deadline_s:
                     k //= 2
-            chosen[cat] = (max(k, 1), max(1, min(n_cap, k)))
+            k = max(k, 1)
+            chosen[cat] = (k, max(1, min(n_cap, k)), tile_for(k))
         return chosen
 
     def choose_max_batch(self, deadline_s: float | None = None) -> dict[str, int]:
-        """The batch half of :meth:`choose_sharding` (kept for callers that
-        predate sharded offload)."""
-        return {cat: k for cat, (k, _n)
+        """The batch slice of :meth:`choose_sharding` (kept for callers
+        that predate sharded/tiled offload)."""
+        return {cat: k for cat, (k, _n, _t)
                 in self.choose_sharding(deadline_s).items()}
 
     def _operator_bound(self, cat: str) -> int:
@@ -167,6 +194,15 @@ class PlanRouter:
             self._operator_dev_caps[cat] = current
         return self._operator_dev_caps.get(cat, self.executor.n_devices)
 
+    def _operator_tile_bound(self, cat: str) -> int | None:
+        """Like :meth:`_operator_bound`, for the tile depth — except the
+        executor has no global tile ceiling (the budget is the default
+        authority), so "no operator pin" is None, not a cap."""
+        current = self.executor.category_tile_ks().get(cat)
+        if current is not None and current != self._router_set_tile.get(cat):
+            self._operator_tile_caps[cat] = current
+        return self._operator_tile_caps.get(cat)
+
     # -- the loop-closer -------------------------------------------------------
     def replan(self, spec=None,
                extra_profiles: tuple[CategoryProfile, ...] = (),
@@ -183,12 +219,13 @@ class PlanRouter:
         to price a hypothetical batching depth (explicit values disable
         adaptation).
 
-        Adaptive batching + sharding: when ``max_batch`` is omitted, the
-        router also *sets* the executor's per-category coalescing ceilings
-        AND sharded device fan-outs to :meth:`choose_sharding`'s picks
-        (observed traffic + optional ``deadline_s`` latency bound) as part
-        of ``apply`` — the caps stop being fixed constructor arguments and
-        follow the workload.
+        Adaptive batching + sharding + tiling: when ``max_batch`` is
+        omitted, the router also *sets* the executor's per-category
+        coalescing ceilings, sharded device fan-outs AND memory-budgeted
+        tile depths to :meth:`choose_sharding`'s ``(max_batch, n_devices,
+        tile_k)`` picks (observed traffic + optional ``deadline_s``
+        latency bound) as part of ``apply`` — the caps stop being fixed
+        constructor arguments and follow the workload.
 
         Fidelity gating: when the executor shadows offloaded batches
         (``fidelity=``), each profile carries the checker's worst observed
@@ -213,7 +250,7 @@ class PlanRouter:
                 if (w := checker.worst(p.name)) is not None else p
                 for p in profiles
             ]
-        chosen: dict[str, tuple[int, int]] | None = None
+        chosen: dict[str, tuple[int, int, int]] | None = None
         if max_batch is None:
             chosen = self.choose_sharding(deadline_s)
             # price at what the traffic achieved, bounded by the adaptive
@@ -233,11 +270,13 @@ class PlanRouter:
         if apply:
             self.apply(plan)
             if chosen is not None:
-                for cat, (k, n) in chosen.items():
+                for cat, (k, n, t) in chosen.items():
                     self.executor.set_max_batch(cat, k)
                     self._router_set[cat] = k
                     self.executor.set_n_devices(cat, n)
                     self._router_set_dev[cat] = n
+                    self.executor.set_tile_k(cat, t)
+                    self._router_set_tile[cat] = t
         return plan
 
     def summary(self) -> str:

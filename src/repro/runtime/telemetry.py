@@ -48,15 +48,25 @@ class BackendStats:
     samples_in: int = 0       # scalars that crossed (or would cross) the DAC
     samples_out: int = 0      # scalars back through the ADC
     wall_s: float = 0.0       # measured execution wall time
+    bytes_in: int = 0         # measured operand bytes staged per dispatch
+    bytes_out: int = 0        # measured result bytes read back
     modeled: StepCost = StepCost(0.0, 0.0, 0.0, 0.0)
+    # per-tile samples: invocation depth (calls coalesced into ONE
+    # dispatched stack — the tile size under memory-budgeted tiling) ->
+    # how many invocations dispatched at that depth
+    tiles: dict = dataclasses.field(default_factory=dict)
 
     def add(self, *, calls: int, samples_in: int, samples_out: int,
-            wall_s: float, modeled: StepCost | None) -> None:
+            wall_s: float, modeled: StepCost | None,
+            bytes_in: int = 0, bytes_out: int = 0) -> None:
         self.calls += calls
         self.invocations += 1
         self.samples_in += samples_in
         self.samples_out += samples_out
         self.wall_s += wall_s
+        self.bytes_in += bytes_in
+        self.bytes_out += bytes_out
+        self.tiles[calls] = self.tiles.get(calls, 0) + 1
         if modeled is not None:
             self.modeled = self.modeled + modeled
 
@@ -136,10 +146,12 @@ class RuntimeTelemetry:
     def record(self, category: str, backend: str, *, calls: int,
                samples_in: int, samples_out: int, wall_s: float,
                modeled: StepCost | None = None,
-               per_device: Sequence[tuple[int, int]] | None = None) -> None:
+               per_device: Sequence[tuple[int, int]] | None = None,
+               bytes_in: int = 0, bytes_out: int = 0) -> None:
         self.stats[(category, backend)].add(
             calls=calls, samples_in=samples_in, samples_out=samples_out,
-            wall_s=wall_s, modeled=modeled)
+            wall_s=wall_s, modeled=modeled, bytes_in=bytes_in,
+            bytes_out=bytes_out)
         if per_device:
             devs = self.device_stats[(category, backend)]
             for i, (s_in, s_out) in enumerate(per_device):
@@ -236,6 +248,36 @@ class RuntimeTelemetry:
             widest = max(widest, len(devs))
         return widest
 
+    def tile_sizes_observed(self, category: str) -> dict[int, int]:
+        """Per-tile samples: ``{invocation depth: dispatch count}`` merged
+        across backends — the tile granularity the executor *actually*
+        dispatched at.  A monolithic K-deep flush shows ``{K: 1}``; the
+        same group streamed through a ``tile_k=4`` budget shows
+        ``{4: K//4, ...}`` (plus a ragged tail entry).  Benchmarks assert
+        the budget-chosen ``tile_k`` against this — the tile the planner
+        picked must be the tile the boundary saw."""
+        out: dict[int, int] = {}
+        for (cat, _backend), st in self.stats.items():
+            if cat != category:
+                continue
+            for size, count in st.tiles.items():
+                out[size] = out.get(size, 0) + count
+        return dict(sorted(out.items()))
+
+    def bytes_per_frame(self, category: str) -> int:
+        """Measured mean staged bytes per call (operand in + result out) —
+        the ground truth the tiling model's working-set estimate is judged
+        against.  0 until traffic with byte accounting has flowed."""
+        calls = total = 0
+        for (cat, _backend), st in self.stats.items():
+            if cat != category:
+                continue
+            calls += st.calls
+            total += st.bytes_in + st.bytes_out
+        if calls <= 0:
+            return 0
+        return total // calls
+
     def observed_occupancy(self, category: str | None = None) -> int:
         """Average calls coalesced per invocation in the observed traffic,
         per category (or globally when ``category`` is None).
@@ -281,7 +323,11 @@ class RuntimeTelemetry:
             mine.samples_in += st.samples_in
             mine.samples_out += st.samples_out
             mine.wall_s += st.wall_s
+            mine.bytes_in += st.bytes_in
+            mine.bytes_out += st.bytes_out
             mine.modeled = mine.modeled + st.modeled
+            for size, count in st.tiles.items():
+                mine.tiles[size] = mine.tiles.get(size, 0) + count
         for key, devs in other.device_stats.items():
             mine_devs = self.device_stats[key]
             for i, st in devs.items():
@@ -320,6 +366,10 @@ class RuntimeTelemetry:
                          f"x{d.invocations}" for i, d in sorted(devs.items())]
                 rows.append(f"           devices[{len(devs)}] "
                             + "; ".join(parts))
+            if len(st.tiles) > 1:  # tiled / mixed-depth dispatch is news
+                parts = [f"depth{s} x{c}"
+                         for s, c in sorted(st.tiles.items())]
+                rows.append("           tiles: " + "; ".join(parts))
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "
                         f"recorded={self.recorded_s():.4g}s")

@@ -791,13 +791,23 @@ def test_result_get_triggers_flush():
 def test_factor_and_mask_caches_are_shared():
     imgs = _imgs(2, shape=(64, 32))
     ex = OffloadExecutor(LANED_4F)
-    # factor matrices are cached per shape (consumed by the batched Pallas
-    # fft path on TPU; off-TPU the backend takes the fused XLA route and
-    # never touches them, so exercise the cache directly)
-    a = ex.ctx.factors(64)
-    b = ex.ctx.factors(32)
-    assert ex.ctx.factors(64) is a and ex.ctx.factors(32) is b
-    assert set(ex.ctx.factor_cache) == {64, 32}
+    # factor matrices are cached per (shape, resolved block layout) —
+    # consumed by the batched Pallas fft path on TPU; off-TPU the backend
+    # takes the fused XLA route and never touches them, so exercise the
+    # cache directly.  Same size + same layout -> one shared entry; a
+    # different block layout is a fresh cache KEY (the stale-kernel fix:
+    # replanning tile_k must never pair a recompiled kernel with factors
+    # cached under the old layout) but aliases the same arrays — the
+    # values depend only on n, so layouts share one O(n^2) pair.
+    blocks = (1, 64, 32, 32)
+    a = ex.ctx.factors(64, blocks)
+    b = ex.ctx.factors(32, blocks)
+    assert ex.ctx.factors(64, blocks) is a and ex.ctx.factors(32, blocks) is b
+    assert (64,) + blocks in ex.ctx.factor_cache
+    assert (32,) + blocks in ex.ctx.factor_cache
+    other = ex.ctx.factors(64, (2, 64, 32, 32))
+    assert (64, 2, 64, 32, 32) in ex.ctx.factor_cache
+    assert other is a                    # aliased, never recomputed
     k = jnp.zeros((64, 32)).at[0, 0].set(1.0)
     ex.run("conv", imgs[0], kernel=k)
     ex.run("conv", imgs[1], kernel=k)

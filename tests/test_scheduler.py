@@ -80,9 +80,9 @@ def _kernel(shape):
 
 
 def _run_eager(backend, category, imgs, spec, *, max_batch, n_devices=1,
-               kernel=None, weights=None):
+               kernel=None, weights=None, tile_k=None):
     ex = OffloadExecutor(spec, max_batch=max_batch, n_devices=n_devices,
-                         default_backend=backend)
+                         default_backend=backend, tile_k=tile_k)
     kw = {k: v for k, v in (("kernel", kernel), ("weights", weights))
           if v is not None}
     hs = [ex.submit(category, im, **kw) for im in imgs]
@@ -91,14 +91,15 @@ def _run_eager(backend, category, imgs, spec, *, max_batch, n_devices=1,
 
 
 def _run_scheduled(backend, category, imgs, spec, *, max_batch, n_devices=1,
-                   kernel=None, weights=None, gaps=GAPS, deadline=DEADLINE):
+                   kernel=None, weights=None, gaps=GAPS, deadline=DEADLINE,
+                   tile_k=None):
     """Drive the same submissions through an admission-controlled stream:
     clock-advance, event-loop poll (may deadline-release held groups
     *before* the new arrival joins them — a genuinely partial release),
     then submit (whose own poll fires rule (a) full releases)."""
     clk = ManualClock()
     ex = OffloadExecutor(spec, max_batch=max_batch, n_devices=n_devices,
-                         default_backend=backend, clock=clk)
+                         default_backend=backend, clock=clk, tile_k=tile_k)
     sched = OffloadScheduler(ex, deadline_s=deadline, clock=clk)
     kw = {k: v for k, v in (("kernel", kernel), ("weights", weights))
           if v is not None}
@@ -114,13 +115,13 @@ def _run_scheduled(backend, category, imgs, spec, *, max_batch, n_devices=1,
 
 
 def check_scheduled_equivalence(backend, category, shape, calls, max_batch,
-                                n_devices=1):
+                                n_devices=1, tile_k=None):
     imgs = _imgs(calls, shape)
     kernel = _kernel(shape) if category == "conv" else None
     name = SHARDED_OF[backend] if n_devices > 1 else backend
     held, hex_ = _run_scheduled(name, category, imgs, SPEC,
                                 max_batch=max_batch, n_devices=n_devices,
-                                kernel=kernel)
+                                kernel=kernel, tile_k=tile_k)
     eager, _ = _run_eager(backend, category, imgs, SPEC, max_batch=max_batch,
                           kernel=kernel)
     looped, _ = _run_eager(backend, category, imgs, SPEC, max_batch=1,
@@ -139,33 +140,44 @@ def check_scheduled_equivalence(backend, category, shape, calls, max_batch,
     assert st.calls == calls                      # nothing lost or doubled
     assert st.invocations >= math.ceil(calls / max_batch)
     assert hex_.pending == 0 and hex_.in_flight == 0
+    if tile_k is not None:
+        # admission-held releases honored the tile ceiling too
+        assert max(hex_.telemetry.tile_sizes_observed(category)) \
+            <= max(1, min(tile_k, max_batch))
 
 
 SCHED_CASES = [
-    # (backend, category, shape, calls, max_batch, n_devices) — ragged
-    # tails (calls % max_batch != 0) and deadline-forced partial releases
-    # (the GAPS pause) throughout; n_devices > 1 routes via the sharded
-    # wrapper (the held queue feeding the fleet).
-    ("host", "fft", (16, 12), 7, 3, 1),
-    ("host", "conv", (16, 12), 5, 4, 1),
-    ("optical-sim", "fft", (16, 12), 8, 3, 1),
-    ("optical-sim", "conv", (12, 8), 7, 4, 1),
-    ("ideal", "fft", (16, 12), 6, 4, 1),
-    ("ideal", "conv", (16, 12), 4, 3, 1),
-    ("host", "fft", (16, 12), 7, 4, 2),
-    ("optical-sim", "fft", (16, 12), 9, 4, 4),
-    ("optical-sim", "conv", (16, 12), 7, 3, 2),
-    ("ideal", "conv", (12, 8), 6, 4, 4),
+    # (backend, category, shape, calls, max_batch, n_devices, tile_k) —
+    # ragged tails (calls % max_batch != 0) and deadline-forced partial
+    # releases (the GAPS pause) throughout; n_devices > 1 routes via the
+    # sharded wrapper (the held queue feeding the fleet); tile_k forces
+    # memory-budgeted tiled dispatch of the released groups.
+    ("host", "fft", (16, 12), 7, 3, 1, None),
+    ("host", "conv", (16, 12), 5, 4, 1, None),
+    ("optical-sim", "fft", (16, 12), 8, 3, 1, None),
+    ("optical-sim", "conv", (12, 8), 7, 4, 1, None),
+    ("ideal", "fft", (16, 12), 6, 4, 1, None),
+    ("ideal", "conv", (16, 12), 4, 3, 1, None),
+    ("host", "fft", (16, 12), 7, 4, 2, None),
+    ("optical-sim", "fft", (16, 12), 9, 4, 4, None),
+    ("optical-sim", "conv", (16, 12), 7, 3, 2, None),
+    ("ideal", "conv", (12, 8), 6, 4, 4, None),
+    # scheduler-held + tiled (+ sharded): a deadline-released partial
+    # group still streams through the tile ceiling, ragged tiles included
+    ("optical-sim", "fft", (16, 12), 8, 5, 1, 2),
+    ("optical-sim", "conv", (12, 8), 7, 4, 2, 3),
+    ("host", "fft", (16, 12), 6, 6, 1, 1),
+    ("ideal", "fft", (12, 8), 7, 4, 4, 2),
 ]
 
 
 @pytest.mark.parametrize(
-    "backend,category,shape,calls,max_batch,n_devices", SCHED_CASES)
+    "backend,category,shape,calls,max_batch,n_devices,tile_k", SCHED_CASES)
 def test_scheduled_equivalence_fixed(backend, category, shape, calls,
-                                     max_batch, n_devices):
+                                     max_batch, n_devices, tile_k):
     """Tier-1 anchor grid (the hypothesis sweep below is nightly/slow)."""
     check_scheduled_equivalence(backend, category, shape, calls, max_batch,
-                                n_devices)
+                                n_devices, tile_k)
 
 
 if HAVE_HYPOTHESIS:
@@ -178,11 +190,12 @@ if HAVE_HYPOTHESIS:
            w=st.integers(min_value=4, max_value=20),
            calls=st.integers(min_value=1, max_value=9),
            max_batch=st.integers(min_value=1, max_value=5),
-           n_devices=st.sampled_from([1, 2, 4]))
+           n_devices=st.sampled_from([1, 2, 4]),
+           tile_k=st.one_of(st.none(), st.integers(min_value=1, max_value=6)))
     def test_scheduled_equivalence_property(backend, category, h, w, calls,
-                                            max_batch, n_devices):
+                                            max_batch, n_devices, tile_k):
         check_scheduled_equivalence(backend, category, (h, w), calls,
-                                    max_batch, n_devices)
+                                    max_batch, n_devices, tile_k)
 
 
 def test_scheduled_matmul_equivalence():

@@ -78,9 +78,10 @@ def _kernel(shape):
 
 
 def _run(backend, category, imgs, spec, *, max_batch, n_devices=1,
-         shard_mode="group", kernel=None, weights=None):
+         shard_mode="group", kernel=None, weights=None, tile_k=None):
     ex = OffloadExecutor(spec, max_batch=max_batch, n_devices=n_devices,
-                         default_backend=backend, shard_mode=shard_mode)
+                         default_backend=backend, shard_mode=shard_mode,
+                         tile_k=tile_k)
     kw = {}
     if kernel is not None:
         kw["kernel"] = kernel
@@ -95,13 +96,16 @@ def _run(backend, category, imgs, spec, *, max_batch, n_devices=1,
 
 
 def check_group_equivalence(backend, category, shape, calls, max_batch,
-                            n_devices):
-    """sharded == single-device batched == looped, to float tolerance."""
+                            n_devices, tile_k=None):
+    """tiled == sharded == single-device batched == looped, to float
+    tolerance.  ``tile_k`` forces memory-budgeted tiled dispatch on the
+    sharded executor (each sub-invocation scatters across the fleet), so
+    the invariant covers tiling composed with sharding."""
     imgs = _imgs(calls, shape)
     kernel = _kernel(shape) if category == "conv" else None
     sharded, exs = _run(SHARDED_OF[backend], category, imgs, SPEC,
                         max_batch=max_batch, n_devices=n_devices,
-                        kernel=kernel)
+                        kernel=kernel, tile_k=tile_k)
     batched, _ = _run(backend, category, imgs, SPEC, max_batch=max_batch,
                       kernel=kernel)
     looped, _ = _run(backend, category, imgs, SPEC, max_batch=1,
@@ -112,23 +116,38 @@ def check_group_equivalence(backend, category, shape, calls, max_batch,
     # every device that took a shard is visible in telemetry, and the
     # shards jointly carried exactly the submitted boundary traffic
     per_dev = exs.telemetry.device_samples(category)
-    n_eff = min(n_devices, min(max_batch, calls))
+    chunk = min(max_batch, calls)
+    tile = chunk if tile_k is None else max(1, min(tile_k, chunk))
+    n_eff = min(n_devices, tile)
     assert exs.telemetry.devices_observed(category) == n_eff
     assert sum(s for s, _ in per_dev.values()) == \
         sum(int(im.size) for im in imgs)
+    if tile_k is not None:
+        # every dispatched stack honored the tile ceiling
+        assert max(exs.telemetry.tile_sizes_observed(category)) <= tile
 
 
 GROUP_CASES = [
-    # (backend, category, shape, calls, max_batch, n_devices) — ragged
-    # tails (calls % max_batch != 0) and shards (chunk % n_devices != 0)
-    ("host", "fft", (16, 12), 5, 3, 2),
-    ("host", "conv", (16, 12), 7, 4, 4),
-    ("optical-sim", "fft", (16, 12), 7, 4, 4),
-    ("optical-sim", "fft", (12, 8), 6, 6, 1),
-    ("optical-sim", "conv", (16, 12), 5, 5, 2),
-    ("optical-sim", "conv", (8, 8), 3, 3, 4),   # fewer items than devices
-    ("ideal", "fft", (16, 12), 4, 2, 2),
-    ("ideal", "conv", (16, 12), 6, 4, 4),
+    # (backend, category, shape, calls, max_batch, n_devices, tile_k) —
+    # ragged tails (calls % max_batch != 0), shards (chunk % n_devices
+    # != 0), and tile tails (chunk % tile_k != 0) throughout; tile_k=None
+    # resolves from the (ample) budget = monolithic chunks.
+    ("host", "fft", (16, 12), 5, 3, 2, None),
+    ("host", "conv", (16, 12), 7, 4, 4, None),
+    ("optical-sim", "fft", (16, 12), 7, 4, 4, None),
+    ("optical-sim", "fft", (12, 8), 6, 6, 1, None),
+    ("optical-sim", "conv", (16, 12), 5, 5, 2, None),
+    ("optical-sim", "conv", (8, 8), 3, 3, 4, None),  # fewer items than devices
+    ("ideal", "fft", (16, 12), 4, 2, 2, None),
+    ("ideal", "conv", (16, 12), 6, 4, 4, None),
+    # tiled: ragged tile tails, tile_k=1 (looped), tile_k>=K (monolithic),
+    # and tiled+sharded combined (each tile scatters across the fleet)
+    ("host", "fft", (16, 12), 7, 7, 1, 3),
+    ("optical-sim", "fft", (16, 12), 7, 7, 1, 3),
+    ("optical-sim", "fft", (12, 8), 5, 5, 1, 1),
+    ("optical-sim", "fft", (12, 8), 5, 5, 1, 8),
+    ("optical-sim", "conv", (16, 12), 6, 6, 2, 4),
+    ("ideal", "conv", (12, 8), 7, 4, 2, 2),
 ]
 
 if HAVE_HYPOTHESIS:
@@ -141,20 +160,22 @@ if HAVE_HYPOTHESIS:
            w=st.integers(min_value=4, max_value=20),
            calls=st.integers(min_value=1, max_value=8),
            max_batch=st.integers(min_value=1, max_value=5),
-           n_devices=st.sampled_from([1, 2, 4]))
+           n_devices=st.sampled_from([1, 2, 4]),
+           tile_k=st.one_of(st.none(), st.integers(min_value=1, max_value=6)))
     def test_group_sharded_equivalence_property(backend, category, h, w,
-                                                calls, max_batch, n_devices):
+                                                calls, max_batch, n_devices,
+                                                tile_k):
         check_group_equivalence(backend, category, (h, w), calls, max_batch,
-                                n_devices)
+                                n_devices, tile_k)
 
 
 @pytest.mark.parametrize(
-    "backend,category,shape,calls,max_batch,n_devices", GROUP_CASES)
+    "backend,category,shape,calls,max_batch,n_devices,tile_k", GROUP_CASES)
 def test_group_sharded_equivalence_fixed(backend, category, shape, calls,
-                                         max_batch, n_devices):
+                                         max_batch, n_devices, tile_k):
     """Tier-1 anchor grid (the hypothesis sweep above is nightly/slow)."""
     check_group_equivalence(backend, category, shape, calls, max_batch,
-                            n_devices)
+                            n_devices, tile_k)
 
 
 @pytest.mark.parametrize("backend", ["host", "optical-sim"])
@@ -443,8 +464,9 @@ def _routed_executor(n_devices=4, max_batch=16):
 
 
 def check_replan_sharding(batch_cap, dev_cap, deadlines):
-    """Chosen (max_batch, n_devices) never violate operator ceilings and
-    are monotone non-increasing as the deadline tightens."""
+    """Chosen (max_batch, n_devices, tile_k) never violate operator
+    ceilings; batch and devices are monotone non-increasing as the
+    deadline tightens, and the tile depth never exceeds the batch."""
     ex, router = _routed_executor()
     if batch_cap is not None:
         ex.set_max_batch("fft", batch_cap)
@@ -454,15 +476,17 @@ def check_replan_sharding(batch_cap, dev_cap, deadlines):
     # loosest first: no deadline, then deadlines tightening monotonically
     order = [None] + sorted(deadlines, reverse=True)
     for deadline in order:
-        k, n = router.choose_sharding(deadline_s=deadline)["fft"]
+        k, n, t = router.choose_sharding(deadline_s=deadline)["fft"]
         assert 1 <= k <= min(16, batch_cap or 16)
         assert 1 <= n <= min(4, dev_cap or 4, k)
+        assert 1 <= t <= k
         if prev_k is not None:
             assert k <= prev_k and n <= prev_n
         prev_k, prev_n = k, n
         router.replan(deadline_s=deadline)  # applying must respect the caps
         assert ex.max_batch_for("fft") == k
         assert ex.n_devices_for("fft") == n
+        assert ex.category_tile_ks()["fft"] == t
 
 
 REPLAN_CASES = [
