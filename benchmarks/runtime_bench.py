@@ -32,6 +32,13 @@ Three claims, measured on the executing runtime (not just the cost model):
   two-deep pipeline and beats both.  The row stamps the budget (bytes,
   source) and asserts the budget-chosen ``tile_k`` is the tile size the
   executor actually dispatched.
+* **Traced column** — the opt-in span tracer re-runs the K-deep flush and
+  reports (a) its own overhead vs the untraced executor (< 5% or the CI
+  smoke fails), (b) how much of the measured flush wall the per-stage
+  charged spans reconcile (coverage ~1), and (c) the boundary-stage drift
+  ratio (measured host staging / modeled DAC+interface), gated by
+  ``drift_gate`` against a static band plus the ``BENCH_history.jsonl``
+  median.
 * **Sharded vs single-device** — scattering the K=16 flush group across n
   replicated simulated accelerators (each paying its own DAC/ADC boundary)
   cuts the modeled invocation wall to max-over-devices + sync: the
@@ -52,6 +59,7 @@ Run:  PYTHONPATH=src python -m benchmarks.runtime_bench
 
 from __future__ import annotations
 
+import datetime
 import json
 import time
 
@@ -65,12 +73,27 @@ from repro.runtime import (
     OffloadExecutor,
     OffloadScheduler,
     PlanRouter,
+    Tracer,
     choose_tile,
+    drift_report,
+    reconcile,
+    write_trace,
 )
 
 SHAPE = (128, 128)
 CALLS = 16
 BENCH_JSON = "BENCH_runtime.json"
+BENCH_HISTORY = "BENCH_history.jsonl"
+
+# Tolerance band for the boundary-stage drift gate (measured host staging /
+# modeled DAC+interface price).  Below 1: the host stages frames cheaper
+# than the modeled optical boundary converts them — the headroom every
+# batching claim rests on.  Above 1 would mean the runtime's own dispatch
+# overhead exceeds the boundary cost it claims to amortize (the cost model
+# and reality have diverged in the claim-breaking direction); the low edge
+# catches a broken clock / empty measurement masquerading as speed.
+DRIFT_BAND = (0.005, 1.0)
+DRIFT_HISTORY_FACTOR = 4.0  # vs the median of prior runs, when >= 3 exist
 
 # Large-frame scenario: the regime where a monolithic (K, H, W) stack
 # falls out of the LLC off-TPU (ROADMAP's last open lever) and the
@@ -194,6 +217,17 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
                        for h in handles) / len(handles)
         if base_wall is None:
             base_wall, base_modeled = wall, modeled
+        # attribution flush (satellite of the 0.71x investigation): rerun
+        # the same group with a tracer attached so the row carries the
+        # per-device scatter-staging breakdown and the per-stage drift —
+        # the timed wall above stays untraced
+        tracer = Tracer()
+        ex.tracer = ex.ctx.tracer = tracer
+        for h in [ex.submit("fft", im) for im in imgs]:
+            pass
+        ex.flush()
+        ex.tracer = ex.ctx.tracer = None
+        rep = drift_report(tracer.spans())
         rows.append({
             "n_devices": n,
             "wall_s_per_call": wall,
@@ -203,8 +237,135 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
             "modeled_speedup": base_modeled / max(modeled, 1e-12),
             "devices_present": len(jax.devices()),
             "devices_used": ex.telemetry.devices_observed("fft"),
+            "trace": rep.to_json(),
         })
     return rows
+
+
+def traced_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
+                      trace_path: str | None = None) -> dict:
+    """The observability column: what does attaching a tracer cost, and do
+    its spans reconcile with both the measured wall and the cost model?
+
+    Three numbers, each a gate the CI smoke asserts:
+
+    * ``tracer_overhead`` — best-of-reps traced vs untraced K-deep flush
+      wall (< 5%: tracing must be cheap enough to leave on in serving).
+    * ``reconcile.coverage`` — per-stage charged sums (stage + compute +
+      hold + shadow) over the measured accounting-flush wall (~1: the
+      span decomposition accounts for the flush end to end).
+    * ``drift.stages.stage.drift`` — measured host staging vs the modeled
+      DAC+interface price (:func:`drift_gate`'s tolerance band).
+
+    Pass ``trace_path`` to also write the Perfetto-loadable export (the CI
+    trace artifact).
+    """
+    imgs = _images(calls, shape)
+    ex0 = OffloadExecutor(BATCHED_4F, max_batch=calls)
+    ex0.warm("fft", imgs[0])
+    untraced = _timed_flush(ex0, imgs, reps=5)
+    tracer = Tracer()
+    ex = OffloadExecutor(BATCHED_4F, max_batch=calls, tracer=tracer)
+    ex.warm("fft", imgs[0])
+    traced = _timed_flush(ex, imgs, reps=5)
+    # accounting flush on a cleared trace: one flush's spans, one wall
+    tracer.clear()
+    for im in imgs:
+        ex.submit("fft", im)
+    t0 = time.perf_counter()
+    ex.flush()
+    flush_wall = time.perf_counter() - t0
+    spans = tracer.spans()
+    rec = reconcile(spans, flush_wall)
+    rep = drift_report(spans)
+    out = {
+        "shape": list(shape),
+        "calls": calls,
+        "untraced_wall_s_per_call": untraced,
+        "traced_wall_s_per_call": traced,
+        "tracer_overhead": traced / max(untraced, 1e-12) - 1.0,
+        "spans": len(spans),
+        "reconcile": rec,
+        "drift": rep.to_json(),
+    }
+    if trace_path:
+        write_trace(trace_path, spans)
+        out["trace_path"] = trace_path
+    return out
+
+
+def drift_gate(drift: dict, history: list[dict] | None = None,
+               band: tuple[float, float] = DRIFT_BAND,
+               history_factor: float = DRIFT_HISTORY_FACTOR,
+               ) -> tuple[bool, str]:
+    """The regression gate over the boundary stage's drift ratio.
+
+    ``drift`` is a ``DriftReport.to_json()`` dict.  Passes when the
+    boundary ("stage") drift is inside ``band`` — and, when ``history``
+    (prior ``BENCH_history.jsonl`` records) holds at least 3 prior traced
+    runs, within ``history_factor`` of their median, so a slow machine-
+    local regression trips even inside the static band.
+    """
+    stage = drift.get("stages", {}).get("stage", {})
+    d = stage.get("drift")
+    if d is None or d == "inf":
+        return False, f"boundary stage drift unmeasurable: {stage!r}"
+    d = float(d)
+    lo, hi = band
+    if not lo <= d <= hi:
+        return False, (f"boundary stage drift {d:.4f} outside tolerance "
+                       f"band [{lo}, {hi}] — cost model and measured "
+                       f"staging have diverged")
+    prior = []
+    for rec in history or []:
+        try:
+            p = rec["traced"]["drift"]["stages"]["stage"]["drift"]
+        except (KeyError, TypeError):
+            continue
+        if isinstance(p, (int, float)):
+            prior.append(float(p))
+    if len(prior) >= 3:
+        med = sorted(prior)[len(prior) // 2]
+        if not med / history_factor <= d <= med * history_factor:
+            return False, (f"boundary stage drift {d:.4f} is more than "
+                           f"{history_factor}x away from the history "
+                           f"median {med:.4f} ({len(prior)} prior runs)")
+        return True, (f"boundary stage drift {d:.4f} within band {band} "
+                      f"and {history_factor}x of history median {med:.4f}")
+    return True, f"boundary stage drift {d:.4f} within band {band}"
+
+
+def load_history(path: str = BENCH_HISTORY) -> list[dict]:
+    """Prior bench records, oldest first (empty when no history yet)."""
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return []
+    out = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return out
+
+
+def append_history(payload: dict, path: str = BENCH_HISTORY) -> dict:
+    """Append one timestamped record to the bench trajectory.
+
+    ``BENCH_runtime.json`` is overwritten in place on every run, so on its
+    own the repo holds no perf *trajectory*; this JSONL keeps every run
+    (UTC-stamped), which is what the drift gate's history band and any
+    cross-PR perf question read."""
+    rec = dict(ts=datetime.datetime.now(datetime.timezone.utc)
+               .isoformat(timespec="seconds"), **payload)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, default=str) + "\n")
+    return rec
 
 
 def large_frame_comparison(shape: tuple[int, int] = LARGE_SHAPE,
@@ -401,6 +562,7 @@ def bench_payload() -> dict:
         "sharded": sharded_comparison(),
         "trickle_comparison": trickle_comparison(),
         "large_frame": large_frame_comparison(),
+        "traced": traced_comparison(),
         "roundtrip": rt,
     }
 
@@ -409,6 +571,10 @@ def write_json(path: str = BENCH_JSON) -> dict:
     payload = bench_payload()
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, default=str)
+    # BENCH_runtime.json is a snapshot; the JSONL keeps the trajectory the
+    # drift gate's history band reads (both main() and benchmarks/run.py
+    # land here, so each bench run is recorded exactly once).
+    append_history(payload)
     return payload
 
 
@@ -465,6 +631,17 @@ def run(payload: dict | None = None) -> list[str]:
         f"|match={lf['tile_matches_dispatch']}"
         f"|budget={lf['budget_bytes'] // (1024 * 1024)}MiB"
         f"({lf['budget_source']})")
+    tc = payload["traced"]
+    stage_drift = tc["drift"]["stages"].get("stage", {}).get("drift")
+    stage_txt = (f"{stage_drift:.3f}"
+                 if isinstance(stage_drift, (int, float)) else "n/a")
+    rows.append(
+        f"runtime,traced,{1e6 * tc['traced_wall_s_per_call']:.1f},"
+        f"tracer_overhead={100 * tc['tracer_overhead']:.1f}%"
+        f"|untraced={1e6 * tc['untraced_wall_s_per_call']:.1f}us"
+        f"|coverage={tc['reconcile']['coverage']:.2f}"
+        f"|stage_drift={stage_txt}"
+        f"|spans={tc['spans']}")
     rt = payload["roundtrip"]
     rows.append(
         f"runtime,roundtrip,,speedup={rt['plan_speedup']:.2f}x"
@@ -475,10 +652,13 @@ def run(payload: dict | None = None) -> list[str]:
 
 
 def main() -> None:
+    history = load_history()  # read before write_json appends this run
     payload = write_json()
     print("section,name,us_per_call,derived")
     for row in run(payload):
         print(row)
+    ok, msg = drift_gate(payload["traced"]["drift"], history)
+    print(f"drift_gate,{'ok' if ok else 'FAIL'},,{msg}")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,13 @@ batching story prices it:
                  streams as tile-sized sub-invocations through the same
                  two-deep pipeline — amortization per tile, cache-resident
                  working set.
+  8. observe   — attach the opt-in span tracer and re-run the conv
+                 workload: one span tree per batched invocation
+                 (submit -> release -> stage -> compute -> shadow), a
+                 one-screen trace digest, wall percentiles per category,
+                 and the modeled-vs-measured drift table that names the
+                 stage where the cost model and the wall clock disagree
+                 most.
 
 Executors are context managers: each ``with`` block below guarantees no
 pending, held, or in-flight group outlives the demo that created it.
@@ -63,6 +70,9 @@ from repro.runtime import (
     OffloadExecutor,
     OffloadScheduler,
     PlanRouter,
+    Tracer,
+    drift_report,
+    summarize,
 )
 
 
@@ -110,6 +120,7 @@ def main() -> None:
     run_sharded_demo(imgs, kernels)
     run_trickle_demo()
     run_tiled_demo(imgs)
+    run_traced_demo(imgs, kernels)
 
 
 def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
@@ -292,6 +303,32 @@ def run_tiled_demo(imgs) -> None:
         print(f"dispatched tile sizes (telemetry): {tiles} — measured "
               f"{ex.telemetry.bytes_per_frame('fft') // 1024} KiB/frame "
               f"staged")
+
+
+def run_traced_demo(imgs, kernels) -> None:
+    # --- 8. observe: boundary-attributed tracing -------------------------------
+    # The tracer is opt-in (OffloadExecutor(tracer=...)); the default is a
+    # no-op with zero hot-path cost.  Each batched invocation becomes one
+    # span tree — submit instants on the sched lane, the release that
+    # dispatched it, the charged host staging (DAC-side) span, the charged
+    # device compute (analog+ADC) span, the fidelity shadow — annotated
+    # with the modeled batched_step_cost decomposition, so the drift
+    # report can name the stage where model and wall clock disagree.
+    tracer = Tracer()
+    with OffloadExecutor(BATCHED_4F, max_batch=16, tracer=tracer,
+                         mem_budget=MemoryBudget.unlimited()) as ex:
+        ex.warm("conv", imgs[0], kernel=kernels[0], batch=len(imgs))
+        ex.telemetry.start()
+        for h in [ex.submit("conv", im, kernel=kernels[0]) for im in imgs]:
+            h.get()
+        ex.telemetry.stop()
+        print("\n-- traced: one flush group, boundary-attributed --")
+        print(summarize(tracer.spans()))
+        pct = ex.telemetry.percentiles("conv")
+        print("conv wall percentiles: " + "  ".join(
+            f"p{int(p)}={v * 1e3:.2f}ms" for p, v in pct.items()))
+        print("\nmodeled-vs-measured drift (per stage):")
+        print(drift_report(tracer.spans()).table())
 
 
 if __name__ == "__main__":

@@ -69,6 +69,22 @@ that runs it.  Module map:
                ``n_devices`` AND memory-budgeted ``tile_k`` are picked
                from observed telemetry (occupancy, per-call boundary
                traffic) under an optional latency ``deadline_s``.
+  tracing    — ``Tracer`` / ``Span``: opt-in boundary-attributed span
+               trees (``OffloadExecutor(tracer=...)``) — one tree per
+               batched invocation covering submit -> held(reason) ->
+               release(full|due|futile) -> tile -> stage -> compute ->
+               fidelity-shadow, with per-device scatter children under
+               sharded dispatch.  Zero overhead when off; injectable
+               clock (``ManualClock``) for exact test assertions.
+  metrics    — ``Counter`` / ``Histogram`` / ``MetricsRegistry``
+               (mergeable log-binned percentile histograms) and
+               ``drift_report``: the modeled-vs-measured per-stage join
+               against ``batched_step_cost`` that names the
+               worst-drifting stage.
+  trace_export — Chrome/Perfetto ``trace_event`` JSON export
+               (``write_trace``), per-stage charged sums
+               (``stage_sums`` / ``reconcile``), one-screen digests
+               (``summarize``).
   specs      — shared demo design points (``BATCHED_4F``: upgraded
                peripherals + frame latency that only batching amortizes).
 
@@ -97,6 +113,14 @@ from repro.runtime.backends import (
 )
 from repro.runtime.executor import OffloadExecutor, OffloadResult
 from repro.runtime.fidelity import FidelityChecker, FidelityReport, enob_error_bound
+from repro.runtime.metrics import (
+    Counter,
+    DriftReport,
+    Histogram,
+    MetricsRegistry,
+    StageDrift,
+    drift_report,
+)
 from repro.runtime.router import PlanRouter
 from repro.runtime.scheduler import ManualClock, OffloadScheduler
 from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
@@ -110,6 +134,14 @@ from repro.runtime.tiling import (
     choose_tile,
     tile_sizes,
 )
+from repro.runtime.trace_export import (
+    reconcile,
+    stage_sums,
+    summarize,
+    to_trace_events,
+    write_trace,
+)
+from repro.runtime.tracing import Span, Tracer
 
 __all__ = [
     "CATEGORIES",
@@ -145,4 +177,17 @@ __all__ = [
     "BATCHED_4F",
     "CAMERA_ADC",
     "SLM_DAC",
+    "Counter",
+    "DriftReport",
+    "Histogram",
+    "MetricsRegistry",
+    "StageDrift",
+    "drift_report",
+    "Span",
+    "Tracer",
+    "reconcile",
+    "stage_sums",
+    "summarize",
+    "to_trace_events",
+    "write_trace",
 ]

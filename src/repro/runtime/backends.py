@@ -132,6 +132,13 @@ class BackendContext:
         dataclasses.field(default_factory=dict)
     _digest_memo: dict[int, tuple[jax.Array, tuple]] = \
         dataclasses.field(default_factory=dict)
+    # The owning executor's tracer (None = tracing off).  Backends with
+    # internally interesting structure (the sharded backend's per-device
+    # scatter/gather loop) emit child spans through it; spans opened inside
+    # an instrumented dispatch nest under the executor's stage span via
+    # the tracer's lexical stack.  Typed loosely to keep backends importable
+    # without the tracing module.
+    tracer: "object | None" = None
 
     def blocks_for(self, batch: int, h: int, w: int) -> "BlockPlan":
         """Resolved Pallas block sizes for a ``(batch, h, w)`` stacked DFT

@@ -64,6 +64,7 @@ from repro.runtime.backends import (
 from repro.runtime.fidelity import FidelityChecker, FidelityReport
 from repro.runtime.telemetry import RuntimeTelemetry
 from repro.runtime.tiling import MemoryBudget, choose_tile, tile_sizes
+from repro.runtime.tracing import Span, Tracer
 
 __all__ = ["OffloadResult", "OffloadExecutor"]
 
@@ -148,6 +149,7 @@ class _Pending:
     backend: str
     result: OffloadResult
     t_submit: float = 0.0   # executor-clock submission timestamp
+    call_id: int = 0        # monotone per-executor submission index
 
     def group_key(self) -> tuple:
         return (self.category, self.backend, tuple(self.x.shape),
@@ -167,6 +169,8 @@ class _Inflight:
     device_samples: list[tuple[int, int]] | None = None  # sharded dispatch
     shadow: bool = False  # fidelity shadow-scoring owed at retire
     hold_s: float = 0.0   # scheduler hold time priced into this invocation
+    span: Span | None = None      # open invocation span (tracing on)
+    t_stage_end: float = 0.0      # tracer-clock time staging finished
 
 
 class OffloadExecutor:
@@ -210,6 +214,15 @@ class OffloadExecutor:
         telemetry arrival-rate estimate (``time.perf_counter`` by default;
         tests and benchmarks inject a manual clock for deterministic
         admission decisions).
+      tracer: optional :class:`~repro.runtime.tracing.Tracer`.  When set,
+        every dispatch emits a boundary-attributed span tree (submit ->
+        held -> release -> invocation -> stage -> compute ->
+        fidelity-shadow, with per-device scatter children under sharded
+        dispatch) plus counters/histograms in ``tracer.metrics``.  The
+        default ``None`` is a measured no-op: instrumentation sites guard
+        on the attribute and add no dispatch work.  For exact span
+        durations in tests, give the tracer the same ``ManualClock`` as
+        ``clock``.
 
     Use as a context manager to guarantee nothing leaks: ``__exit__``
     flushes queued *and* scheduler-held work, then drains the pipeline.
@@ -228,7 +241,8 @@ class OffloadExecutor:
                  shard_mode: str = "auto",
                  mem_budget: MemoryBudget | None = None,
                  tile_k: int | None = None,
-                 clock: Callable[[], float] = time.perf_counter) -> None:
+                 clock: Callable[[], float] = time.perf_counter,
+                 tracer: Tracer | None = None) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if pipeline_depth < 1:
@@ -243,7 +257,8 @@ class OffloadExecutor:
             mem_budget = MemoryBudget.detect()
         self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth,
                                   n_devices=n_devices, shard_mode=shard_mode,
-                                  mem_budget=mem_budget)
+                                  mem_budget=mem_budget, tracer=tracer)
+        self.tracer = tracer
         self.default_backend = default_backend
         self.telemetry = telemetry or RuntimeTelemetry()
         self.fidelity = fidelity
@@ -259,6 +274,11 @@ class OffloadExecutor:
         self._queue: list[_Pending] = []
         self._inflight: collections.deque[_Inflight] = collections.deque()
         self._last_retire_end = 0.0
+        self._n_submitted = 0
+        # tracer-clock end of the last charged compute span: leaf compute
+        # spans start no earlier, so they never overlap within the device
+        # lane (the same never-double-bill rule _retire's wall uses)
+        self._trace_compute_end = 0.0
         self._backends: dict[str, ExecutionBackend] = {}
         # the admission-control policy driving release decisions, when one
         # is attached (repro.runtime.scheduler.OffloadScheduler); None means
@@ -387,8 +407,13 @@ class OffloadExecutor:
         result = OffloadResult(self)
         t = self._clock()
         self.telemetry.note_submit(category, t)
+        self._n_submitted += 1
+        if self.tracer is not None:
+            self.tracer.instant("submit", lane="sched", category=category,
+                                backend=name, call_id=self._n_submitted)
         self._queue.append(_Pending(category, x, kernel, weights, name,
-                                    result, t_submit=t))
+                                    result, t_submit=t,
+                                    call_id=self._n_submitted))
         return result
 
     def run(self, category: str, x: jax.Array, **kwargs) -> jax.Array:
@@ -435,10 +460,16 @@ class OffloadExecutor:
             raise ValueError("batch must be >= 1")
         self.ctx.n_devices = self.n_devices_for(category)
         tile = self.resolve_tile_k(category, x, batch, weights=weights)
-        for b in sorted({1} | set(tile_sizes(batch, tile))):
-            outs, _ = be.run(category, [x] * b, self.ctx,
-                             kernel=kernel, weights=weights)
-            _block(outs)
+        # warm-up runs are not workload: suppress backend-side tracing so
+        # priming does not litter the trace with orphan device spans
+        saved, self.ctx.tracer = self.ctx.tracer, None
+        try:
+            for b in sorted({1} | set(tile_sizes(batch, tile))):
+                outs, _ = be.run(category, [x] * b, self.ctx,
+                                 kernel=kernel, weights=weights)
+                _block(outs)
+        finally:
+            self.ctx.tracer = saved
 
     @property
     def pending(self) -> int:
@@ -473,8 +504,8 @@ class OffloadExecutor:
             groups.setdefault(p.group_key(), []).append(p)
         return groups
 
-    def release(self, key: tuple, count: int | None = None,
-                ) -> list[OffloadResult]:
+    def release(self, key: tuple, count: int | None = None, *,
+                reason: str = "flush") -> list[OffloadResult]:
         """Dispatch the first ``count`` queued members of group ``key``
         (all of them by default), leaving the rest *held* in the queue.
 
@@ -487,6 +518,10 @@ class OffloadExecutor:
         :meth:`resolve_tile_k`) that double-buffer against each other.
         Hold time (dispatch minus oldest member's submit) is priced into
         each invocation when a scheduler is attached.
+
+        ``reason`` records *why* the release happened in the trace (the
+        scheduler passes its admission verdict: ``full`` / ``due`` /
+        ``futile``; eager paths pass ``flush``).
         """
         members = [p for p in self._queue if p.group_key() == key]
         if count is not None:
@@ -495,12 +530,20 @@ class OffloadExecutor:
             return []
         chosen = set(map(id, members))
         self._queue = [p for p in self._queue if id(p) not in chosen]
+        tr = self.tracer
+        rel = None
+        if tr is not None:
+            rel = tr.begin("release", lane="sched", reason=reason,
+                           category=members[0].category, count=len(members))
+            tr.metrics.counter("release", reason=reason).inc()
         done: list[OffloadResult] = []
         cap = self.max_batch_for(members[0].category)
         for i in range(0, len(members), cap):
             chunk = members[i:i + cap]
-            self._dispatch_async(chunk)
+            self._dispatch_async(chunk, reason=reason, parent=rel)
             done.extend(p.result for p in chunk)
+        if rel is not None:
+            tr.end(rel)
         return done
 
     def flush_async(self) -> list[OffloadResult]:
@@ -547,7 +590,9 @@ class OffloadExecutor:
                                      for p in f.chunk):
             self._retire(self._inflight.popleft())
 
-    def _dispatch_async(self, chunk: list[_Pending]) -> None:
+    def _dispatch_async(self, chunk: list[_Pending], *,
+                        reason: str = "flush",
+                        parent: Span | None = None) -> None:
         """Dispatch one released chunk, tiled against the memory budget.
 
         A chunk whose monolithic ``(K, H, W)`` stack fits the staging
@@ -565,11 +610,17 @@ class OffloadExecutor:
         tile = self.resolve_tile_k(head.category, head.x, len(chunk),
                                    weights=head.weights)
         start = 0
-        for size in tile_sizes(len(chunk), tile):
-            self._dispatch_invocation(chunk[start:start + size])
+        sizes = tile_sizes(len(chunk), tile)
+        for t, size in enumerate(sizes):
+            self._dispatch_invocation(chunk[start:start + size],
+                                      reason=reason, parent=parent,
+                                      tile=t, tiles=len(sizes))
             start += size
 
-    def _dispatch_invocation(self, chunk: list[_Pending]) -> None:
+    def _dispatch_invocation(self, chunk: list[_Pending], *,
+                             reason: str = "flush",
+                             parent: Span | None = None,
+                             tile: int = 0, tiles: int = 1) -> None:
         # Keep at most pipeline_depth invocations in flight: retiring here
         # is what makes the pipeline two-deep rather than unbounded (frame
         # buffers are finite), and it blocks on the *oldest* invocation
@@ -588,9 +639,37 @@ class OffloadExecutor:
         # deterministic modeled columns benchmarks assert on.
         hold_s = (self._clock() - min(p.t_submit for p in chunk)
                   if self._scheduler is not None else 0.0)
+        tr = self.tracer
+        inv = None
+        t_stage_end = 0.0
+        if tr is not None:
+            inv = tr.begin("invocation", lane="host", parent=parent,
+                           category=head.category, backend=head.backend,
+                           batch=len(chunk), tile=tile, tiles=tiles,
+                           reason=reason,
+                           call_ids=[p.call_id for p in chunk])
+            if hold_s > 0.0:
+                # retrospective: the hold window ended now, at dispatch
+                t_now = tr.now()
+                tr.record("held", max(t_now - hold_s, 0.0), t_now,
+                          lane="sched", kind="async", parent=inv,
+                          reason=reason, category=head.category,
+                          hold_s=hold_s)
+            tr.metrics.counter("invocations", category=head.category,
+                               backend=head.backend).inc()
         t0 = time.perf_counter()
-        outs, modeled = be.run(head.category, xs, self.ctx,
-                               kernel=head.kernel, weights=head.weights)
+        if tr is not None:
+            # lexical: backend-side spans (sharded per-device scatter /
+            # gather) nest under the stage span via the tracer's stack
+            with tr.span("stage", lane="host", parent=inv,
+                         batch=len(chunk), tile=tile):
+                outs, modeled = be.run(head.category, xs, self.ctx,
+                                       kernel=head.kernel,
+                                       weights=head.weights)
+            t_stage_end = tr.now()
+        else:
+            outs, modeled = be.run(head.category, xs, self.ctx,
+                                   kernel=head.kernel, weights=head.weights)
         dispatch_s = time.perf_counter() - t0
         take = getattr(be, "take_device_samples", None)
         device_samples = take() if take is not None else None
@@ -600,6 +679,16 @@ class OffloadExecutor:
             # held open accumulating occupancy (StepCost.hold_s)
             modeled = dataclasses.replace(
                 modeled, hold_s=modeled.hold_s + hold_s)
+        if inv is not None and modeled is not None:
+            # the decomposition the drift report joins measured spans
+            # against — the exact batched_step_cost the planner priced
+            inv.annotate(modeled_dac_s=modeled.dac_s,
+                         modeled_adc_s=modeled.adc_s,
+                         modeled_interface_s=modeled.interface_s,
+                         modeled_analog_s=modeled.analog_s,
+                         modeled_host_s=modeled.host_s,
+                         modeled_hold_s=modeled.hold_s,
+                         modeled_total_s=modeled.total_s)
         # host-like backends have no modeled price: provisional cost is the
         # staging+dispatch wall share (refined to the full measured wall at
         # retire), so ``cost`` honors the 'valid once ready' contract even
@@ -615,7 +704,8 @@ class OffloadExecutor:
         inflight = _Inflight(chunk=chunk, be=be, outs=outs,
                              modeled=modeled, t0=t0, dispatch_s=dispatch_s,
                              device_samples=device_samples, shadow=shadow,
-                             hold_s=hold_s)
+                             hold_s=hold_s, span=inv,
+                             t_stage_end=t_stage_end)
         if shadow:
             # shadow scoring needs concrete values: validation mode is
             # synchronous by construction (batches the sample_every knob
@@ -652,9 +742,37 @@ class OffloadExecutor:
             samples_in=samples_in, samples_out=samples_out, wall_s=wall,
             modeled=f.modeled, per_device=f.device_samples,
             bytes_in=bytes_in, bytes_out=bytes_out)
+        tr = self.tracer
+        compute_end = 0.0
+        if tr is not None and f.span is not None:
+            # Charged decomposition: stage takes the host staging+dispatch
+            # share of the charged wall, compute the in-flight remainder —
+            # so stage + compute == wall exactly, pipeline overlap is never
+            # billed twice, and per-stage sums reconcile with the flush's
+            # measured wall (the export/drift contract).  Deferred
+            # retirement (wall == dispatch_s) yields a zero-length compute
+            # span: the device window elapsed under someone else's clock.
+            stage_charged = min(f.dispatch_s, wall)
+            compute_charged = max(wall - stage_charged, 0.0)
+            c0 = max(f.t_stage_end, self._trace_compute_end)
+            compute_end = c0 + compute_charged
+            tr.record("compute", c0, compute_end, lane="device",
+                      parent=f.span, backend=f.be.name,
+                      charged_s=compute_charged, deferred=already_done)
+            self._trace_compute_end = compute_end
+            f.span.annotate(wall_s=wall, stage_s=stage_charged,
+                            compute_s=compute_charged, hold_s=f.hold_s,
+                            shadow_s=0.0, deferred=already_done)
+            tr.metrics.histogram(
+                "invocation_wall_s", category=f.chunk[0].category,
+                backend=f.be.name).record(wall)
         report = None
         if f.shadow:
             t1 = time.perf_counter()
+            sh = None
+            if tr is not None and f.span is not None:
+                sh = tr.begin("fidelity-shadow", lane="host", kind="sync",
+                              parent=f.span, category=f.chunk[0].category)
             refs, _ = self._backend("host").run(
                 f.chunk[0].category, [p.x for p in f.chunk], self.ctx,
                 kernel=f.chunk[0].kernel, weights=f.chunk[0].weights)
@@ -665,6 +783,9 @@ class OffloadExecutor:
                                          f.outs, refs, enob=enob)
             # validation overhead, not workload: keep it out of 'other'
             dt = time.perf_counter() - t1
+            if sh is not None:
+                tr.end(sh)
+                f.span.annotate(shadow_s=dt)
             self.telemetry.discount_window(dt)
             self._last_retire_end += dt
         if f.modeled is None:
@@ -678,3 +799,8 @@ class OffloadExecutor:
         if report is not None:
             for p in f.chunk:
                 p.result.fidelity = report
+        if tr is not None and f.span is not None:
+            # the invocation container closes at retirement, covering its
+            # children (the charged compute window may extend past now
+            # when clocks mix — containment wins)
+            tr.end(f.span, max(tr.now(), compute_end))

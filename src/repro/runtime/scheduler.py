@@ -143,7 +143,8 @@ class OffloadScheduler:
             # (a) full: dispatch complete chunks, keep the tail held
             full = (len(members) // cap) * cap
             if full:
-                released.extend(self.executor.release(key, full))
+                released.extend(self.executor.release(key, full,
+                                                      reason="full"))
                 members = members[full:]
                 if not members:
                     continue
@@ -157,7 +158,8 @@ class OffloadScheduler:
             # hold until the deadline decides)
             futile = (0.0 < rate < math.inf) and (age + 1.0 / rate > deadline)
             if due or futile:
-                released.extend(self.executor.release(key))
+                released.extend(self.executor.release(
+                    key, reason="due" if due else "futile"))
         return released
 
     def release_all(self) -> list[OffloadResult]:

@@ -46,6 +46,7 @@ Per-device boundary traffic is surfaced to the executor via
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import jax
@@ -72,6 +73,26 @@ __all__ = ["ShardedOpticalBackend", "shard_sizes", "kernel_halo"]
 
 # Inners frame sharding knows how to drive (group sharding takes any inner).
 _FRAME_INNERS = ("host", "optical-sim", "ideal")
+
+
+def _device_span(ctx, d: int, frames: int):
+    """Span over one device's host-side scatter staging (device_put + inner
+    dispatch) when the owning executor traces; no-op otherwise.  This is
+    the instrumentation that makes the sharded wall regression *visible*:
+    the per-device loop runs on the host sequentially, so its spans sum to
+    the serial staging cost the modeled max-over-devices wall never pays."""
+    tr = getattr(ctx, "tracer", None)
+    if tr is None:
+        return contextlib.nullcontext()
+    return tr.span("scatter", lane=f"device{d}", device=d, frames=frames)
+
+
+def _gather_span(ctx, n_blocks: int):
+    """Span over the host-side gather + reassembly of per-device blocks."""
+    tr = getattr(ctx, "tracer", None)
+    if tr is None:
+        return contextlib.nullcontext()
+    return tr.span("gather", lane="host", blocks=n_blocks)
 
 
 def shard_sizes(total: int, n: int) -> list[int]:
@@ -243,15 +264,16 @@ class ShardedOpticalBackend(ExecutionBackend):
         for d, size in enumerate(sizes):
             shard = xs[start:start + size]
             start += size
-            if devices is not None:
-                # only the frames are committed per device: the kernel /
-                # weights (and the masks derived from them) stay
-                # uncommitted, so jit moves them to whichever device each
-                # shard's stack pins the computation to — one cached mask
-                # and one content hash serve the whole fleet
-                shard = [jax.device_put(x, devices[d]) for x in shard]
-            o, c = self.inner.run(category, shard, ctx, kernel=kernel,
-                                  weights=weights)
+            with _device_span(ctx, d, size):
+                if devices is not None:
+                    # only the frames are committed per device: the kernel /
+                    # weights (and the masks derived from them) stay
+                    # uncommitted, so jit moves them to whichever device
+                    # each shard's stack pins the computation to — one
+                    # cached mask and one content hash serve the whole fleet
+                    shard = [jax.device_put(x, devices[d]) for x in shard]
+                o, c = self.inner.run(category, shard, ctx, kernel=kernel,
+                                      weights=weights)
             outs.extend(o)
             costs.append(c)
             samples.append((sum(int(x.size) for x in shard),
@@ -282,25 +304,27 @@ class ShardedOpticalBackend(ExecutionBackend):
         blocks, costs, samples = [], [], []
         r0 = 0
         for d, rows in enumerate(sizes):
-            ext = rows + halo_t + halo_b
-            idx = jnp.arange(r0 - halo_t, r0 + rows + halo_b) % h
-            sub = jnp.take(v, idx, axis=1)
-            k_sub = self._folded(kernel, ext, ctx)
-            if devices is not None:
-                # the tile is committed; k_sub / its mask stay uncommitted
-                # and follow it (see _run_group)
-                sub = jax.device_put(sub, devices[d])
-            if optical:
-                out_sub = optical_conv2d_batched(sub, ctx.mask(k_sub),
-                                                 ctx.sim_params, None)
-            else:
-                out_sub = _host_circular_conv(sub, k_sub)
+            with _device_span(ctx, d, len(xs)):
+                ext = rows + halo_t + halo_b
+                idx = jnp.arange(r0 - halo_t, r0 + rows + halo_b) % h
+                sub = jnp.take(v, idx, axis=1)
+                k_sub = self._folded(kernel, ext, ctx)
+                if devices is not None:
+                    # the tile is committed; k_sub / its mask stay
+                    # uncommitted and follow it (see _run_group)
+                    sub = jax.device_put(sub, devices[d])
+                if optical:
+                    out_sub = optical_conv2d_batched(sub, ctx.mask(k_sub),
+                                                     ctx.sim_params, None)
+                else:
+                    out_sub = _host_circular_conv(sub, k_sub)
             blocks.append(out_sub[:, halo_t:halo_t + rows, :])
             samples.append((int(sub.size), len(xs) * rows * w))
             costs.append(self._frame_conv_cost(ctx, ext * w, rows * w,
                                                len(xs)))
             r0 += rows
-        out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
+        with _gather_span(ctx, len(blocks)):
+            out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
         if optical:
             out = out * scale + lo * jnp.sum(kernel)
         self._last_device_samples = samples
@@ -320,23 +344,25 @@ class ShardedOpticalBackend(ExecutionBackend):
         blocks, costs, samples = [], [], []
         r0 = 0
         for d, rows in enumerate(sizes):
-            sub = stack[:, r0:r0 + rows, :]
-            if devices is not None:
-                # activations committed per device; uncommitted weights
-                # follow them under jit (see _run_group)
-                sub = jax.device_put(sub, devices[d])
-            if self.inner_name == "optical-sim":
-                out_sub = _optical_matmul_batched(
-                    sub, weights, dac_bits=ctx.spec.dac.bits,
-                    adc_bits=ctx.spec.adc.bits)
-            else:
-                out_sub = _host_matmul(sub, weights)
+            with _device_span(ctx, d, len(xs)):
+                sub = stack[:, r0:r0 + rows, :]
+                if devices is not None:
+                    # activations committed per device; uncommitted weights
+                    # follow them under jit (see _run_group)
+                    sub = jax.device_put(sub, devices[d])
+                if self.inner_name == "optical-sim":
+                    out_sub = _optical_matmul_batched(
+                        sub, weights, dac_bits=ctx.spec.dac.bits,
+                        adc_bits=ctx.spec.adc.bits)
+                else:
+                    out_sub = _host_matmul(sub, weights)
             blocks.append(out_sub)
             samples.append((int(sub.size), int(out_sub.size)))
             costs.append(self._frame_matmul_cost(ctx, len(xs), rows, kdim,
                                                  nout))
             r0 += rows
-        out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
+        with _gather_span(ctx, len(blocks)):
+            out = jnp.concatenate(_gather_blocks(blocks, devices), axis=1)
         self._last_device_samples = samples
         return list(out), self._combine(costs, len(sizes), ctx)
 

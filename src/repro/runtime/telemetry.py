@@ -31,6 +31,7 @@ from typing import Sequence
 
 from repro.core.accelerator import StepCost
 from repro.core.planner import CategoryProfile
+from repro.runtime.metrics import Histogram
 
 __all__ = ["BackendStats", "DeviceStats", "RuntimeTelemetry"]
 
@@ -100,6 +101,10 @@ class RuntimeTelemetry:
         self._submits: dict[str, collections.deque[float]] = \
             collections.defaultdict(
                 lambda: collections.deque(maxlen=_ARRIVAL_WINDOW))
+        # (category, backend) -> per-invocation wall-time histogram: the
+        # percentile view (p50/p95/p99) the multi-tenant SLO roadmap item
+        # needs — totals say how much, percentiles say how consistently
+        self._latency: dict[tuple[str, str], Histogram] = {}
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -109,10 +114,13 @@ class RuntimeTelemetry:
         self._t0 = time.perf_counter()
 
     def stop(self) -> float:
-        if self._t0 is None:
-            raise RuntimeError("telemetry window not started")
-        self._window_s += time.perf_counter() - self._t0
-        self._t0 = None
+        """Close the measurement window; idempotent.  ``stop`` without a
+        matching ``start`` (teardown paths can hit this — an example's
+        ``finally`` block, a reset mid-window) is a no-op returning the
+        accumulated window, not an error."""
+        if self._t0 is not None:
+            self._window_s += time.perf_counter() - self._t0
+            self._t0 = None
         return self._window_s
 
     @property
@@ -152,6 +160,8 @@ class RuntimeTelemetry:
             calls=calls, samples_in=samples_in, samples_out=samples_out,
             wall_s=wall_s, modeled=modeled, bytes_in=bytes_in,
             bytes_out=bytes_out)
+        self._latency.setdefault((category, backend),
+                                 Histogram()).record(wall_s)
         if per_device:
             devs = self.device_stats[(category, backend)]
             for i, (s_in, s_out) in enumerate(per_device):
@@ -264,6 +274,35 @@ class RuntimeTelemetry:
                 out[size] = out.get(size, 0) + count
         return dict(sorted(out.items()))
 
+    def latency_histogram(self, category: str,
+                          backend: str | None = None) -> Histogram | None:
+        """Per-invocation wall-time histogram for ``(category, backend)``
+        — or, with ``backend=None``, a merged copy across every backend
+        that served the category.  ``None`` when no traffic recorded."""
+        if backend is not None:
+            h = self._latency.get((category, backend))
+            return None if h is None else h.copy()
+        merged: Histogram | None = None
+        for (cat, _b), h in self._latency.items():
+            if cat != category:
+                continue
+            if merged is None:
+                merged = h.copy()
+            else:
+                merged.merge(h)
+        return merged
+
+    def percentiles(self, category: str, backend: str | None = None,
+                    ps: Sequence[float] = (50.0, 95.0, 99.0),
+                    ) -> dict[float, float]:
+        """p50/p95/p99 (by default) of per-invocation wall time for
+        ``(category, backend)`` — NaN-valued when no traffic recorded, so
+        SLO dashboards can render the absence without special-casing."""
+        h = self.latency_histogram(category, backend)
+        if h is None:
+            return {p: float("nan") for p in ps}
+        return h.percentiles(ps)
+
     def bytes_per_frame(self, category: str) -> int:
         """Measured mean staged bytes per call (operand in + result out) —
         the ground truth the tiling model's working-set estimate is judged
@@ -340,6 +379,11 @@ class RuntimeTelemetry:
             merged = sorted(list(mine_ts) + list(ts))
             mine_ts.clear()
             mine_ts.extend(merged[-_ARRIVAL_WINDOW:])
+        for key, h in other._latency.items():
+            if key in self._latency:
+                self._latency[key].merge(h)
+            else:
+                self._latency[key] = h.copy()
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
@@ -347,6 +391,7 @@ class RuntimeTelemetry:
         self.stats.clear()
         self.device_stats.clear()
         self._submits.clear()
+        self._latency.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0
@@ -370,6 +415,12 @@ class RuntimeTelemetry:
                 parts = [f"depth{s} x{c}"
                          for s, c in sorted(st.tiles.items())]
                 rows.append("           tiles: " + "; ".join(parts))
+            h = self._latency.get((cat, backend))
+            if h is not None and h.n > 1:  # percentiles of one are noise
+                rows.append(
+                    f"           wall p50={h.percentile(50):.3g}s "
+                    f"p95={h.percentile(95):.3g}s "
+                    f"p99={h.percentile(99):.3g}s (n={h.n})")
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "
                         f"recorded={self.recorded_s():.4g}s")
