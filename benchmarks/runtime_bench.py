@@ -39,6 +39,14 @@ Three claims, measured on the executing runtime (not just the cost model):
   ratio (measured host staging / modeled DAC+interface), gated by
   ``drift_gate`` against a static band plus the ``BENCH_history.jsonl``
   median.
+* **Chaos column** — the same offload traffic through a chaos-wrapped
+  optical backend injecting a seeded fault mix (transient errors,
+  stragglers, ENOB drift, device loss) at 0 / 1% / 10% per-dispatch
+  rates: every frame still retires within the ENOB bound of the looped
+  host baseline (retry + host fallback + drift correction), and the row
+  reports goodput, fault counts, recovery-latency percentiles, and
+  quarantine events.  A separate overhead row shows the rate-0 chaos
+  wrapper costs < 2% on the traced wall.
 * **Sharded vs single-device** — scattering the K=16 flush group across n
   replicated simulated accelerators (each paying its own DAC/ADC boundary)
   cuts the modeled invocation wall to max-over-devices + sync: the
@@ -68,6 +76,7 @@ import numpy as np
 
 from repro.runtime import (
     BATCHED_4F,
+    FidelityChecker,
     ManualClock,
     MemoryBudget,
     OffloadExecutor,
@@ -76,7 +85,9 @@ from repro.runtime import (
     Tracer,
     choose_tile,
     drift_report,
+    enob_error_bound,
     reconcile,
+    register_chaos,
     write_trace,
 )
 
@@ -100,6 +111,19 @@ DRIFT_HISTORY_FACTOR = 4.0  # vs the median of prior runs, when >= 3 exist
 # memory budget decides the staging granularity.
 LARGE_SHAPE = (512, 512)
 LARGE_CALLS = 16
+
+# Chaos scenario: the fault-injection config stamped into
+# BENCH_runtime.json.  Rates are per-dispatch fault probabilities; the
+# schedule is seeded, so every bench run injects the identical fault
+# sequence and the goodput/recovery columns are comparable across PRs.
+CHAOS_RATES = (0.0, 0.01, 0.10)
+CHAOS_CALLS = 48
+CHAOS_SHAPE = (64, 64)
+CHAOS_MAX_BATCH = 8
+# seed chosen so the 10% stream provably injects within the bench's
+# dispatch count (48 calls / max_batch 8 -> 6 draws; seed 2 faults at
+# draw 2) — a chaos bench that never faults proves nothing
+CHAOS_SEED = 2
 
 # Trickle-arrival scenario: the scheduler config stamped into
 # BENCH_runtime.json so the occupancy trajectory stays interpretable
@@ -509,6 +533,90 @@ def trickle_comparison(shape: tuple[int, int] = (64, 64),
     }
 
 
+def chaos_comparison(rates=CHAOS_RATES, shape=CHAOS_SHAPE,
+                     calls: int = CHAOS_CALLS,
+                     max_batch: int = CHAOS_MAX_BATCH,
+                     seed: int = CHAOS_SEED) -> dict:
+    """Goodput and recovery latency under injected boundary faults.
+
+    Each rate row routes the same ``calls`` submissions through a
+    chaos-wrapped optical backend injecting a seeded fault mix (transient
+    dispatch errors, stragglers, ENOB drift, device loss) at that
+    per-dispatch probability, on a ``ManualClock`` so injected straggles
+    and retry backoffs advance deterministic time instead of sleeping.
+    The equivalence contract is asserted per row: every submitted frame
+    retires, and every result lands within the converters' ENOB error
+    bound of the looped host baseline (frames the retry policy degraded to
+    the host fallback, or the drift-correction path repaired from the
+    fidelity shadow, match it bit-for-bit).  ``recovery`` summarizes the
+    first-fault-to-correct-result latency histogram from telemetry.
+    """
+    imgs = _images(calls, shape)
+    host = OffloadExecutor(BATCHED_4F, default_backend="host", max_batch=1)
+    refs = [np.asarray(h.get()) for h in
+            [host.submit("fft", im) for im in imgs]]
+    enob = min(BATCHED_4F.dac.effective_bits, BATCHED_4F.adc.effective_bits)
+    bound = enob_error_bound(enob, 16.0)
+    rows = []
+    for rate in rates:
+        name = register_chaos("optical-sim", name=f"chaos{int(100 * rate)}",
+                              rate=rate, seed=seed)
+        clk = ManualClock()
+        ex = OffloadExecutor(BATCHED_4F, default_backend=name,
+                             max_batch=max_batch, clock=clk,
+                             fidelity=FidelityChecker() if rate else None)
+        ex.warm("fft", imgs[0], backend="optical-sim")
+        wall = _timed_flush(ex, imgs)
+        # no telemetry reset: the fault/recovery columns cover the whole
+        # seeded run (timed reps + the accounting flush below) — one
+        # continuous draw stream on a ManualClock, so still deterministic
+        handles = [ex.submit("fft", im) for im in imgs]
+        ex.flush()
+        rel = [float(np.linalg.norm(np.asarray(h.value) - r)
+                     / max(float(np.linalg.norm(r)), 1e-12))
+               for h, r in zip(handles, refs)]
+        retired = sum(1 for h in handles
+                      if h.ready and h.value is not None)
+        rows.append({
+            "fault_rate": rate,
+            "calls": calls,
+            "retired": retired,
+            "all_retired": retired == calls,
+            "max_rel_err": max(rel),
+            "enob_bound": bound,
+            "within_bound": max(rel) <= bound,
+            "wall_s_per_call": wall,
+            "goodput_calls_per_s": retired / max(wall * calls, 1e-12),
+            "faults": {k: int(v) for k, v in
+                       sorted(ex.telemetry.fault_counts.get("fft",
+                                                            {}).items())},
+            "faults_total": ex.telemetry.faults_total("fft"),
+            "recovery": ex.telemetry.recovery_stats("fft"),
+            "quarantine_events": len(ex.quarantine.events),
+        })
+    return {"shape": list(shape), "calls": calls, "max_batch": max_batch,
+            "seed": seed, "enob_bound": bound, "rows": rows}
+
+
+def chaos_overhead(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
+                   reps: int = 7) -> dict:
+    """What the chaos wrapper costs when it injects nothing: traced
+    K-deep flush through a rate-0 chaos-wrapped optical backend vs the
+    bare optical backend (< 2% or the chaos CI smoke fails — fault
+    *readiness* must be cheap enough to leave on)."""
+    imgs = _images(calls, shape)
+    plain = OffloadExecutor(BATCHED_4F, max_batch=calls, tracer=Tracer())
+    plain.warm("fft", imgs[0])
+    base = _timed_flush(plain, imgs, reps=reps)
+    name = register_chaos("optical-sim", name="chaos-idle", rate=0.0)
+    chaos = OffloadExecutor(BATCHED_4F, default_backend=name,
+                            max_batch=calls, tracer=Tracer())
+    chaos.warm("fft", imgs[0], backend="optical-sim")
+    wall = _timed_flush(chaos, imgs, reps=reps)
+    return {"plain_wall_s_per_call": base, "chaos_wall_s_per_call": wall,
+            "overhead": wall / max(base, 1e-12) - 1.0}
+
+
 def roundtrip() -> dict:
     """Profile on host -> plan from telemetry -> execute -> compare."""
     imgs = _images()
@@ -563,6 +671,8 @@ def bench_payload() -> dict:
         "trickle_comparison": trickle_comparison(),
         "large_frame": large_frame_comparison(),
         "traced": traced_comparison(),
+        "chaos": chaos_comparison(),
+        "chaos_overhead": chaos_overhead(),
         "roundtrip": rt,
     }
 
@@ -642,6 +752,25 @@ def run(payload: dict | None = None) -> list[str]:
         f"|coverage={tc['reconcile']['coverage']:.2f}"
         f"|stage_drift={stage_txt}"
         f"|spans={tc['spans']}")
+    for r in payload["chaos"]["rows"]:
+        rec = r["recovery"] or {}
+        rec_txt = (f"{1e3 * rec['p95_s']:.1f}ms" if rec else "n/a")
+        faults = ";".join(f"{k}x{v}" for k, v in r["faults"].items()) or "none"
+        rows.append(
+            f"runtime,chaos{int(100 * r['fault_rate'])},"
+            f"{1e6 * r['wall_s_per_call']:.1f},"
+            f"retired={r['retired']}/{r['calls']}"
+            f"|goodput={r['goodput_calls_per_s']:.0f}/s"
+            f"|max_rel_err={r['max_rel_err']:.2e}"
+            f"|within_bound={r['within_bound']}"
+            f"|faults={faults}"
+            f"|recovery_p95={rec_txt}"
+            f"|quarantines={r['quarantine_events']}")
+    co = payload["chaos_overhead"]
+    rows.append(
+        f"runtime,chaos_overhead,{1e6 * co['chaos_wall_s_per_call']:.1f},"
+        f"overhead={100 * co['overhead']:.1f}%"
+        f"|plain={1e6 * co['plain_wall_s_per_call']:.1f}us")
     rt = payload["roundtrip"]
     rows.append(
         f"runtime,roundtrip,,speedup={rt['plan_speedup']:.2f}x"

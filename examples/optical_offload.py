@@ -47,6 +47,15 @@ batching story prices it:
                  and the modeled-vs-measured drift table that names the
                  stage where the cost model and the wall clock disagree
                  most.
+  9. survive   — wrap the optical backend in a seeded ``ChaosBackend``
+                 (10% of dispatches fault: transient errors, stragglers,
+                 ENOB drift, device loss) and serve the same frames: the
+                 retry ladder re-runs transient faults, exhaustion
+                 degrades gracefully to the host backend, drifted batches
+                 are corrected from the fidelity shadow and the category
+                 quarantined — every frame still retires, in order, within
+                 the converters' error budget, with the whole fault story
+                 visible in fault counters and recovery percentiles.
 
 Executors are context managers: each ``with`` block below guarantees no
 pending, held, or in-flight group outlives the demo that created it.
@@ -72,6 +81,8 @@ from repro.runtime import (
     PlanRouter,
     Tracer,
     drift_report,
+    enob_error_bound,
+    register_chaos,
     summarize,
 )
 
@@ -121,6 +132,7 @@ def main() -> None:
     run_trickle_demo()
     run_tiled_demo(imgs)
     run_traced_demo(imgs, kernels)
+    run_chaos_demo()
 
 
 def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
@@ -329,6 +341,42 @@ def run_traced_demo(imgs, kernels) -> None:
             f"p{int(p)}={v * 1e3:.2f}ms" for p, v in pct.items()))
         print("\nmodeled-vs-measured drift (per stage):")
         print(drift_report(tracer.spans()).table())
+
+
+def run_chaos_demo(calls: int = 32, rate: float = 0.10) -> None:
+    # --- 9. survive: fault-injected offload under the retry/quarantine policy --
+    # A seeded ChaosBackend perturbs 10% of dispatches (transient errors,
+    # latency-spike stragglers, ENOB drift, hard device loss).  The
+    # executor's RetryPolicy retries transients with jittered backoff
+    # (slept through the ManualClock — no real waiting), degrades to the
+    # host backend when the ladder exhausts (quarantining the category so
+    # later dispatches reroute instead of re-paying retries), and the
+    # fidelity shadow corrects drifted batches on the spot.  The claim:
+    # every frame retires, in submit order, within the ENOB error budget.
+    frames = [jax.random.uniform(jax.random.fold_in(
+        jax.random.PRNGKey(7), i), (64, 64)) for i in range(calls)]
+    chaos = register_chaos("optical-sim", name="chaos-demo",
+                           rate=rate, seed=2)
+    clk = ManualClock()
+    with OffloadExecutor(BATCHED_4F, default_backend=chaos, max_batch=4,
+                         clock=clk, fidelity=FidelityChecker()) as ex:
+        ex.warm("fft", frames[0])
+        handles = [ex.submit("fft", f) for f in frames]
+    with OffloadExecutor(BATCHED_4F, default_backend="host",
+                         max_batch=1) as host:
+        refs = [host.submit("fft", f) for f in frames]
+    enob = min(BATCHED_4F.dac.effective_bits, BATCHED_4F.adc.effective_bits)
+    bound = enob_error_bound(enob, 16.0)
+    worst = max(float(jnp.linalg.norm(h.value - r.value)
+                      / jnp.maximum(jnp.linalg.norm(r.value), 1e-12))
+                for h, r in zip(handles, refs))
+    served = {h.backend for h in handles}
+    print(f"\n-- chaos: {rate:.0%} injected fault rate over {calls} calls --")
+    print(ex.telemetry.summary())
+    print(f"served by {sorted(served)}; all retired: "
+          f"{all(h.ready for h in handles)}; worst rel error {worst:.2e} "
+          f"(ENOB bound {bound:.2e}) -> within budget: {worst <= bound}")
+    print(ex.quarantine.summary(ex.now()))
 
 
 if __name__ == "__main__":

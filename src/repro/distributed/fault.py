@@ -2,11 +2,14 @@
 
 Single-controller runtime model (what a real pod deployment uses):
   * every step runs under a watchdog deadline derived from a trailing
-    median of healthy step times — a straggling step (slow host, flaky
-    ICI link) is *detected* and counted; past ``straggler_patience``
-    consecutive stragglers the runner treats the step as a failure
-    (on real fleets: reschedule the slow host, shrink the mesh, or
-    restart from checkpoint — here: restart path);
+    median of healthy step times (the shared
+    :class:`~repro.distributed.straggler.TrailingMedianDeadline` — the
+    same detector the offload runtime's dispatch watchdog uses, so the
+    training and serving fault stories cannot diverge) — a straggling
+    step (slow host, flaky ICI link) is *detected* and counted; past
+    ``straggler_patience`` consecutive stragglers the runner treats the
+    step as a failure (on real fleets: reschedule the slow host, shrink
+    the mesh, or restart from checkpoint — here: restart path);
   * any exception in a step (preemption, device loss — simulated in tests
     by injected faults) triggers restore-from-latest-checkpoint and replay;
     the data pipeline is step-keyed so replayed batches are bit-identical;
@@ -23,6 +26,7 @@ import time
 from typing import Any, Callable
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.straggler import TrailingMedianDeadline
 
 __all__ = ["FaultTolerantRunner", "RunReport"]
 
@@ -51,10 +55,6 @@ class FaultTolerantRunner:
         self.straggler_patience = straggler_patience
         self.max_restarts = max_restarts
 
-    def _median(self, xs: list[float]) -> float:
-        s = sorted(xs)
-        return s[len(s) // 2] if s else float("inf")
-
     def run(self, state: Any, start_step: int, num_steps: int,
             *, fault_hook: Callable[[int], None] | None = None) -> tuple[Any, RunReport]:
         """Run ``num_steps`` steps with recovery.  ``fault_hook(step)`` may
@@ -62,8 +62,8 @@ class FaultTolerantRunner:
         report = RunReport(final_step=start_step)
         step = start_step
         restarts = 0
-        consecutive_stragglers = 0
-        healthy: list[float] = []
+        detector = TrailingMedianDeadline(factor=self.straggler_factor,
+                                          patience=self.straggler_patience)
         end = start_step + num_steps
         while step < end:
             try:
@@ -73,17 +73,13 @@ class FaultTolerantRunner:
                 state = self.step_fn(state, step)
                 dt = time.perf_counter() - t0
                 report.step_times_s.append(dt)
-                med = self._median(healthy[-32:])
-                if healthy and dt > self.straggler_factor * med:
+                if detector.observe(dt):
                     report.stragglers_detected += 1
-                    consecutive_stragglers += 1
-                    if consecutive_stragglers >= self.straggler_patience:
+                    if detector.exhausted:
                         raise RuntimeError(
                             f"persistent straggler: step {step} took {dt:.3f}s "
-                            f"(median {med:.3f}s) x{self.straggler_patience}")
-                else:
-                    consecutive_stragglers = 0
-                    healthy.append(dt)
+                            f"(median {detector.median:.3f}s) "
+                            f"x{self.straggler_patience}")
                 step += 1
                 report.steps_run += 1
                 if step % self.checkpoint_every == 0:
@@ -101,7 +97,7 @@ class FaultTolerantRunner:
                     step = start_step
                 else:
                     state, step = restored, restored_step
-                consecutive_stragglers = 0
+                detector.reset_strikes()
         self.manager.wait()
         report.final_step = step
         return state, report

@@ -69,6 +69,19 @@ that runs it.  Module map:
                ``n_devices`` AND memory-budgeted ``tile_k`` are picked
                from observed telemetry (occupancy, per-call boundary
                traffic) under an optional latency ``deadline_s``.
+  faults     — the fault story for the conversion boundary:
+               ``ChaosBackend`` wraps any registered backend with a
+               deterministic seeded ``FaultSchedule`` (transient dispatch
+               errors, latency-spike stragglers, ENOB drift, hard device
+               loss); ``RetryPolicy`` gives every executor dispatch
+               deadline/retry/backoff semantics with graceful degradation
+               to the host backend; ``DispatchWatchdog`` applies the
+               training runner's trailing-median straggler deadline to
+               dispatch walls; ``Quarantine`` time-windows failing devices
+               and categories out of the scatter/routing set with
+               probation-based re-admission.  The equivalence invariant
+               survives every fault: all frames retire, in order, with
+               host-equal results.
   tracing    — ``Tracer`` / ``Span``: opt-in boundary-attributed span
                trees (``OffloadExecutor(tracer=...)``) — one tree per
                batched invocation covering submit -> held(reason) ->
@@ -112,6 +125,20 @@ from repro.runtime.backends import (
     register_backend,
 )
 from repro.runtime.executor import OffloadExecutor, OffloadResult
+from repro.runtime.faults import (
+    ChaosBackend,
+    DeviceLostError,
+    DispatchWatchdog,
+    Fault,
+    FaultError,
+    FaultSchedule,
+    Quarantine,
+    QuarantineEvent,
+    RetryPolicy,
+    TransientDispatchError,
+    advance_or_sleep,
+    register_chaos,
+)
 from repro.runtime.fidelity import FidelityChecker, FidelityReport, enob_error_bound
 from repro.runtime.metrics import (
     Counter,
@@ -156,6 +183,18 @@ __all__ = [
     "register_backend",
     "OffloadExecutor",
     "OffloadResult",
+    "ChaosBackend",
+    "DeviceLostError",
+    "DispatchWatchdog",
+    "Fault",
+    "FaultError",
+    "FaultSchedule",
+    "Quarantine",
+    "QuarantineEvent",
+    "RetryPolicy",
+    "TransientDispatchError",
+    "advance_or_sleep",
+    "register_chaos",
     "FidelityChecker",
     "FidelityReport",
     "enob_error_bound",

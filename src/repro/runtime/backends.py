@@ -45,6 +45,7 @@ import abc
 import dataclasses
 import functools
 import hashlib
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -139,6 +140,23 @@ class BackendContext:
     # the tracer's lexical stack.  Typed loosely to keep backends importable
     # without the tracing module.
     tracer: "object | None" = None
+    # The owning executor's timebase (``ManualClock`` in deterministic
+    # tests/benches, ``time.perf_counter`` live).  Fault-aware backends
+    # sleep injected straggles and stamp quarantine windows through it so
+    # the whole fault story replays bit-identically under a manual clock.
+    clock: "Callable[[], float]" = time.perf_counter
+    # Devices declared lost for the *current* dispatch only (chaos
+    # injection): the sharded backend's shard on a lost device raises
+    # DeviceLostError and recovers on a survivor.  Cleared by the injector.
+    lost_devices: frozenset = frozenset()
+    # Fault-handling collaborators (duck-typed like ``tracer`` to keep
+    # backends importable without the faults/telemetry modules): the
+    # executor's Quarantine (sharded dispatch skips quarantined devices and
+    # records new exclusions here), its DispatchWatchdog (per-device
+    # straggler deadlines), and its RuntimeTelemetry (fault counters).
+    quarantine: "object | None" = None
+    watchdog: "object | None" = None
+    telemetry: "object | None" = None
 
     def blocks_for(self, batch: int, h: int, w: int) -> "BlockPlan":
         """Resolved Pallas block sizes for a ``(batch, h, w)`` stacked DFT

@@ -61,6 +61,13 @@ from repro.runtime.backends import (
     ExecutionBackend,
     get_backend,
 )
+from repro.runtime.faults import (
+    DispatchWatchdog,
+    FaultError,
+    Quarantine,
+    RetryPolicy,
+    advance_or_sleep,
+)
 from repro.runtime.fidelity import FidelityChecker, FidelityReport
 from repro.runtime.telemetry import RuntimeTelemetry
 from repro.runtime.tiling import MemoryBudget, choose_tile, tile_sizes
@@ -71,6 +78,15 @@ __all__ = ["OffloadResult", "OffloadExecutor"]
 # Backends whose batches carry quantization error worth shadow-scoring (the
 # sharded backend's default inner is the optical simulator).
 _SHADOWED = ("optical-sim", "sharded")
+
+
+def _shadow_worthy(be: ExecutionBackend) -> bool:
+    """Whether ``be``'s batches deserve fidelity shadowing.  Wrappers (the
+    chaos backend) expose the wrapped backend via ``inner_name`` so a
+    fault-injected optical backend is shadowed like the optical backend —
+    the drift faults it injects are exactly what the shadow must catch."""
+    return (be.name in _SHADOWED
+            or getattr(be, "inner_name", None) in _SHADOWED)
 
 
 def _block(x: Any) -> None:
@@ -214,6 +230,16 @@ class OffloadExecutor:
         telemetry arrival-rate estimate (``time.perf_counter`` by default;
         tests and benchmarks inject a manual clock for deterministic
         admission decisions).
+      retry: the per-dispatch fault policy
+        (:class:`~repro.runtime.faults.RetryPolicy`; a default one if
+        omitted).  Every batched invocation runs under it: a dispatch
+        raising :class:`~repro.runtime.faults.FaultError` is retried with
+        exponential, jittered backoff (slept through ``clock``); when every
+        attempt faults the dispatch degrades to ``retry.fallback`` (host)
+        and the category is quarantined so subsequent dispatches reroute
+        immediately.  The policy also configures the dispatch watchdog
+        (straggler deadlines from modeled wall x trailing median) and the
+        quarantine windows.
       tracer: optional :class:`~repro.runtime.tracing.Tracer`.  When set,
         every dispatch emits a boundary-attributed span tree (submit ->
         held -> release -> invocation -> stage -> compute ->
@@ -242,6 +268,7 @@ class OffloadExecutor:
                  mem_budget: MemoryBudget | None = None,
                  tile_k: int | None = None,
                  clock: Callable[[], float] = time.perf_counter,
+                 retry: RetryPolicy | None = None,
                  tracer: Tracer | None = None) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -257,11 +284,26 @@ class OffloadExecutor:
             mem_budget = MemoryBudget.detect()
         self.ctx = BackendContext(spec=spec, pipeline_depth=pipeline_depth,
                                   n_devices=n_devices, shard_mode=shard_mode,
-                                  mem_budget=mem_budget, tracer=tracer)
+                                  mem_budget=mem_budget, tracer=tracer,
+                                  clock=clock)
         self.tracer = tracer
         self.default_backend = default_backend
         self.telemetry = telemetry or RuntimeTelemetry()
         self.fidelity = fidelity
+        self.retry = retry or RetryPolicy()
+        self.quarantine = Quarantine(window_s=self.retry.quarantine_s,
+                                     probation_s=self.retry.probation_s,
+                                     patience=self.retry.straggler_patience)
+        self._watchdog = DispatchWatchdog(
+            factor=self.retry.straggler_factor,
+            window=self.retry.straggler_window,
+            floor_s=self.retry.straggler_floor_s,
+            patience=self.retry.straggler_patience)
+        # fault-handling collaborators travel with the dispatch context so
+        # the sharded backend quarantines devices through the same policy
+        self.ctx.quarantine = self.quarantine
+        self.ctx.watchdog = self._watchdog
+        self.ctx.telemetry = self.telemetry
         self.max_batch = max_batch
         self.pipeline_depth = pipeline_depth
         self.n_devices = n_devices
@@ -288,6 +330,13 @@ class OffloadExecutor:
     @property
     def spec(self):
         return self.ctx.spec
+
+    def now(self) -> float:
+        """Current executor-clock time.  Quarantine windows, probation
+        checks, and the router's quarantine-aware fan-out shrink all read
+        this timebase, so the whole fault lifecycle replays exactly under
+        an injected :class:`~repro.runtime.scheduler.ManualClock`."""
+        return self._clock()
 
     # -- per-category batching ceilings ---------------------------------------
     def max_batch_for(self, category: str) -> int:
@@ -393,9 +442,34 @@ class OffloadExecutor:
 
     def __exit__(self, exc_type, exc, tb) -> bool:
         # Drain even when unwinding an exception: handles given out must
-        # not be left forever-pending, and telemetry must balance.
-        self.flush()
+        # not be left forever-pending, and telemetry must balance.  When
+        # the body raised, drain errors are swallowed so the body's
+        # exception is never masked by cleanup.
+        self.close(unwinding=exc_type is not None)
         return False
+
+    def close(self, *, unwinding: bool = False) -> None:
+        """Release every scheduler-held group and retire every in-flight
+        invocation, letting no submitted frame drop silently — even when a
+        release raises partway (the remaining groups still drain; the first
+        error re-raises afterwards).  ``unwinding=True`` (the exception
+        path of ``__exit__``) swallows drain errors instead so the caller's
+        exception survives the cleanup."""
+        first: BaseException | None = None
+        for key in list(self.pending_groups()):
+            try:
+                self.release(key, reason="close")
+            except BaseException as e:
+                if first is None:
+                    first = e
+        while self._inflight:
+            try:
+                self._retire(self._inflight.popleft())
+            except BaseException as e:
+                if first is None:
+                    first = e
+        if first is not None and not unwinding:
+            raise first
 
     # -- client API ------------------------------------------------------------
     def submit(self, category: str, x: jax.Array, *,
@@ -461,8 +535,11 @@ class OffloadExecutor:
         self.ctx.n_devices = self.n_devices_for(category)
         tile = self.resolve_tile_k(category, x, batch, weights=weights)
         # warm-up runs are not workload: suppress backend-side tracing so
-        # priming does not litter the trace with orphan device spans
+        # priming does not litter the trace with orphan device spans, and
+        # the straggler watchdog so first-call compile time can never
+        # strike (let alone quarantine) a healthy device
         saved, self.ctx.tracer = self.ctx.tracer, None
+        saved_wd, self.ctx.watchdog = self.ctx.watchdog, None
         try:
             for b in sorted({1} | set(tile_sizes(batch, tile))):
                 outs, _ = be.run(category, [x] * b, self.ctx,
@@ -470,6 +547,7 @@ class OffloadExecutor:
                 _block(outs)
         finally:
             self.ctx.tracer = saved
+            self.ctx.watchdog = saved_wd
 
     @property
     def pending(self) -> int:
@@ -617,6 +695,125 @@ class OffloadExecutor:
                                       tile=t, tiles=len(sizes))
             start += size
 
+    def _reroute_quarantined(self, category: str,
+                             be: ExecutionBackend) -> ExecutionBackend:
+        """The quarantine fast-path: while ``(category,)``'s backend is
+        quarantined (retry exhaustion / fidelity drift), dispatches go
+        straight to the fallback instead of re-paying the retry ladder.
+        After the window expires, dispatch returns to the original backend
+        on probation — re-offending there doubles the next window."""
+        policy = self.retry
+        if be.name == policy.fallback:
+            return be
+        if not self.quarantine.is_quarantined(("category", category),
+                                              self._clock()):
+            return be
+        fb = self._backend(policy.fallback)
+        if not fb.supports(category, self.ctx):
+            return be
+        self.telemetry.note_fault(category, "reroute")
+        if self.tracer is not None:
+            self.tracer.instant("fallback", lane="sched", category=category,
+                                backend=be.name, to=fb.name,
+                                reason="quarantined")
+            self.tracer.metrics.counter("reroutes", category=category).inc()
+        return fb
+
+    def _run_guarded(self, be: ExecutionBackend, head: _Pending,
+                     xs: list, *, parent: Span | None = None):
+        """One batched invocation under the retry policy.
+
+        Returns ``(outs, modeled, served_backend)``.  A dispatch raising
+        :class:`FaultError` retries on the same backend with exponential
+        jittered backoff (slept through the injected clock); exhausting
+        ``max_attempts`` degrades to the fallback backend — which always
+        returns correct results, preserving the runtime-equivalence
+        invariant — and quarantines the category.  Successful dispatch
+        walls feed the straggler watchdog: a wall past ``factor x
+        max(trailing median, modeled wall, floor)`` is counted and traced
+        as a straggle fault (detection only at this level — device-level
+        quarantine lives in the sharded backend, category quarantine in
+        the exhaustion/drift paths, so a noisy host clock can never
+        quarantine a healthy backend).
+        """
+        tr = self.tracer
+        cat = head.category
+        policy = self.retry
+        t_first_fault: float | None = None
+        for attempt in range(1, policy.max_attempts + 1):
+            t0 = self._clock()
+            try:
+                outs, modeled = be.run(cat, xs, self.ctx,
+                                       kernel=head.kernel,
+                                       weights=head.weights)
+            except FaultError as e:
+                if t_first_fault is None:
+                    t_first_fault = t0
+                self.telemetry.note_fault(cat, e.kind)
+                if tr is not None:
+                    tr.instant("fault", lane="sched", parent=parent,
+                               category=cat, backend=be.name, kind=e.kind,
+                               attempt=attempt)
+                    tr.metrics.counter("faults", category=cat,
+                                       kind=e.kind).inc()
+                if attempt >= policy.max_attempts:
+                    break
+                backoff = policy.backoff_for(attempt)
+                rt0 = tr.now() if tr is not None else 0.0
+                advance_or_sleep(self._clock, backoff)
+                if tr is not None:
+                    tr.record("retry", rt0, tr.now(), lane="sched",
+                              kind="async", parent=parent, category=cat,
+                              backend=be.name, attempt=attempt,
+                              backoff_s=backoff)
+                    tr.metrics.counter("retries", category=cat,
+                                       backend=be.name).inc()
+                continue
+            elapsed = self._clock() - t0
+            base = modeled.total_s if modeled is not None else None
+            if self._watchdog.observe((cat, be.name), elapsed, base):
+                self.telemetry.note_fault(cat, "straggle")
+                if tr is not None:
+                    tr.instant("fault", lane="sched", parent=parent,
+                               category=cat, backend=be.name,
+                               kind="straggle", elapsed_s=elapsed)
+                    tr.metrics.counter("faults", category=cat,
+                                       kind="straggle").inc()
+            else:
+                self.quarantine.note_healthy(("category", cat))
+            if t_first_fault is not None:
+                dt = self._clock() - t_first_fault
+                self.telemetry.note_recovery(cat, dt)
+                if tr is not None:
+                    tr.metrics.histogram("recovery_s",
+                                         category=cat).record(dt)
+            return outs, modeled, be
+        # every attempt faulted: graceful degradation — the fallback is
+        # always correct, so the caller still gets its results in order
+        fb = self._backend(policy.fallback)
+        ev = self.quarantine.quarantine(("category", cat), self._clock(),
+                                        reason="retry-exhausted")
+        self.telemetry.note_fault(cat, "fallback")
+        if tr is not None:
+            tr.instant("fallback", lane="sched", parent=parent,
+                       category=cat, backend=be.name, to=fb.name,
+                       reason="retry-exhausted")
+            q0 = tr.now()
+            tr.record("quarantine", q0, q0 + (ev.until - ev.t), lane="sched",
+                      kind="async", parent=parent, key=str(ev.key),
+                      reason=ev.reason, level=ev.level)
+            tr.metrics.counter("fallbacks", category=cat,
+                               backend=be.name).inc()
+            tr.metrics.counter("quarantines", reason=ev.reason).inc()
+        outs, modeled = fb.run(cat, xs, self.ctx, kernel=head.kernel,
+                               weights=head.weights)
+        if t_first_fault is not None:
+            dt = self._clock() - t_first_fault
+            self.telemetry.note_recovery(cat, dt)
+            if tr is not None:
+                tr.metrics.histogram("recovery_s", category=cat).record(dt)
+        return outs, modeled, fb
+
     def _dispatch_invocation(self, chunk: list[_Pending], *,
                              reason: str = "flush",
                              parent: Span | None = None,
@@ -628,7 +825,8 @@ class OffloadExecutor:
         while len(self._inflight) >= self.pipeline_depth:
             self._retire(self._inflight.popleft())
         head = chunk[0]
-        be = self._backend(head.backend)
+        be = self._reroute_quarantined(head.category,
+                                       self._backend(head.backend))
         xs = [p.x for p in chunk]
         # per-category device fan-out, written the same way warm() writes it
         self.ctx.n_devices = self.n_devices_for(head.category)
@@ -663,14 +861,15 @@ class OffloadExecutor:
             # gather) nest under the stage span via the tracer's stack
             with tr.span("stage", lane="host", parent=inv,
                          batch=len(chunk), tile=tile):
-                outs, modeled = be.run(head.category, xs, self.ctx,
-                                       kernel=head.kernel,
-                                       weights=head.weights)
+                outs, modeled, be = self._run_guarded(be, head, xs,
+                                                      parent=inv)
             t_stage_end = tr.now()
         else:
-            outs, modeled = be.run(head.category, xs, self.ctx,
-                                   kernel=head.kernel, weights=head.weights)
+            outs, modeled, be = self._run_guarded(be, head, xs)
         dispatch_s = time.perf_counter() - t0
+        if inv is not None and be.name != head.backend:
+            # graceful degradation happened: record who actually served it
+            inv.annotate(served_backend=be.name)
         take = getattr(be, "take_device_samples", None)
         device_samples = take() if take is not None else None
         batch = len(chunk)
@@ -699,7 +898,7 @@ class OffloadExecutor:
         for p, out in zip(chunk, outs):
             # async fill: the value is dispatched, not yet materialized
             p.result._fill(out, share, be.name, batch, None)
-        shadow = (self.fidelity is not None and be.name in _SHADOWED
+        shadow = (self.fidelity is not None and _shadow_worthy(be)
                   and self.fidelity.should_check(head.category))
         inflight = _Inflight(chunk=chunk, be=be, outs=outs,
                              modeled=modeled, t0=t0, dispatch_s=dispatch_s,
@@ -788,6 +987,42 @@ class OffloadExecutor:
                 f.span.annotate(shadow_s=dt)
             self.telemetry.discount_window(dt)
             self._last_retire_end += dt
+            cat = f.chunk[0].category
+            if not report.ok and f.be.name != self.retry.fallback:
+                # ENOB-drift violation (a mis-ranged DAC, a drifted
+                # detector): the shadow refs are already paid for, so the
+                # batch is CORRECTED from them — every caller still gets
+                # host-equal results — and the category is quarantined
+                # through the same path retry exhaustion uses, so the
+                # router's next replan and the reroute fast-path both shrink
+                # around the drifting backend until probation clears it.
+                ev = self.quarantine.quarantine(("category", cat),
+                                                self._clock(),
+                                                reason="fidelity-drift")
+                self.telemetry.note_fault(cat, "drift")
+                self.telemetry.note_recovery(cat, dt)
+                for p, ref in zip(f.chunk, refs):
+                    p.result.value = ref
+                    p.result.backend = self.retry.fallback
+                if tr is not None and f.span is not None:
+                    tr.instant("fault", lane="sched", parent=f.span,
+                               category=cat, backend=f.be.name,
+                               kind="drift", rel_err=report.rel_err,
+                               bound=report.bound)
+                    tr.instant("fallback", lane="sched", parent=f.span,
+                               category=cat, backend=f.be.name,
+                               to=self.retry.fallback, reason="drift")
+                    q0 = tr.now()
+                    tr.record("quarantine", q0, q0 + (ev.until - ev.t),
+                              lane="sched", kind="async", parent=f.span,
+                              key=str(ev.key), reason=ev.reason,
+                              level=ev.level)
+                    tr.metrics.counter("faults", category=cat,
+                                       kind="drift").inc()
+                    tr.metrics.counter("quarantines",
+                                       reason=ev.reason).inc()
+                    tr.metrics.histogram("recovery_s",
+                                         category=cat).record(dt)
         if f.modeled is None:
             # refine the provisional dispatch-only share to the measured
             # wall (the hold share survives the refinement: queueing delay

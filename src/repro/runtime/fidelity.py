@@ -119,6 +119,13 @@ class FidelityChecker:
         return report
 
     # -- rollups ---------------------------------------------------------------
+    def violations(self, category: str | None = None) -> list[FidelityReport]:
+        """Reports whose relative error blew through the ENOB bound — the
+        drifted/mis-ranged batches.  The executor's drift-correction path
+        quarantines on these; operators read them to see what drifted."""
+        return [r for r in self.reports
+                if not r.ok and (category is None or r.category == category)]
+
     def worst(self, category: str | None = None) -> FidelityReport | None:
         pool = [r for r in self.reports
                 if category is None or r.category == category]

@@ -142,6 +142,13 @@ class PlanRouter:
         for cat in telemetry.categories():
             k = min(ex.max_batch, self._operator_bound(cat))
             n_cap = min(ex.n_devices, self._operator_device_bound(cat))
+            q = getattr(ex, "quarantine", None)
+            if q is not None:
+                # quarantined devices are not capacity: the plan shrinks
+                # its fan-out around them (at least one device always
+                # remains — the sharded scatter falls back the same way)
+                avail = ex.n_devices - q.active_device_count(ex.now())
+                n_cap = max(1, min(n_cap, avail))
             tile_cap = self._operator_tile_bound(cat)
             n_in, n_out = telemetry.samples_per_call(cat)
 

@@ -210,7 +210,9 @@ class OffloadScheduler:
         return self
 
     def __exit__(self, exc_type, exc, tb) -> bool:
-        self.executor.flush()
+        # held + in-flight groups drain even when the body raised (and a
+        # drain error never masks the body's exception)
+        self.executor.close(unwinding=exc_type is not None)
         return False
 
     def summary(self) -> str:

@@ -56,6 +56,7 @@ import numpy as np
 from repro.core.accelerator import StepCost
 from repro.core.optical import optical_conv2d_batched
 from repro.distributed.sharding import shard_devices
+from repro.runtime.faults import DeviceLostError, FaultError
 from repro.runtime.backends import (
     CONV_CAPTURES,
     BackendContext,
@@ -255,31 +256,132 @@ class ShardedOpticalBackend(ExecutionBackend):
 
     # -- (a) group sharding: scatter the stacked flush group -------------------
     def _run_group(self, category, xs, ctx, kernel, weights):
-        sizes = shard_sizes(len(xs), ctx.n_devices)
+        q = getattr(ctx, "quarantine", None)
+        clock = getattr(ctx, "clock", None)
+        now = clock() if clock is not None else 0.0
+        n = max(1, int(ctx.n_devices))
+        # scatter only across survivors: quarantined devices sit out until
+        # their probation window clears (with the whole fleet quarantined,
+        # device 0 serves alone rather than the dispatch failing)
+        pool = [d for d in range(n)
+                if q is None or not q.is_quarantined(("device", d), now)]
+        if not pool:
+            pool = [0]
+        # chaos-injected device loss is a property of THIS dispatch only;
+        # the injector clears ctx.lost_devices after the run
+        lost = frozenset(getattr(ctx, "lost_devices", frozenset()) or ())
+        sizes = shard_sizes(len(xs), len(pool))
         devices = shard_devices(len(sizes))
         outs: list[jax.Array] = []
         costs: list[StepCost | None] = []
         samples: list[tuple[int, int]] = []
         start = 0
-        for d, size in enumerate(sizes):
+        for i, size in enumerate(sizes):
             shard = xs[start:start + size]
             start += size
-            with _device_span(ctx, d, size):
-                if devices is not None:
-                    # only the frames are committed per device: the kernel /
-                    # weights (and the masks derived from them) stay
-                    # uncommitted, so jit moves them to whichever device
-                    # each shard's stack pins the computation to — one
-                    # cached mask and one content hash serve the whole fleet
-                    shard = [jax.device_put(x, devices[d]) for x in shard]
-                o, c = self.inner.run(category, shard, ctx, kernel=kernel,
-                                      weights=weights)
+            d = pool[i]
+            t0 = clock() if clock is not None else 0.0
+            try:
+                if d in lost:
+                    raise DeviceLostError(d)
+                with _device_span(ctx, d, size):
+                    o, c = self._shard_dispatch(category, shard, ctx, kernel,
+                                                weights, devices, i)
+            except FaultError as e:
+                # the shard's device failed mid-scatter: quarantine it and
+                # re-run the SAME shard on a surviving device — every frame
+                # still retires, from survivors, in order
+                self._note_device_fault(ctx, category, d, e)
+                self._quarantine_device(ctx, d, reason=e.kind)
+                sv = next((s for s in pool if s != d and s not in lost), d)
+                with _device_span(ctx, sv, size):
+                    o, c = self._shard_dispatch(category, shard, ctx, kernel,
+                                                weights, devices, i)
+                d = sv
+            else:
+                dt = (clock() - t0) if clock is not None else 0.0
+                self._observe_shard(ctx, category, d, dt, c)
             outs.extend(o)
             costs.append(c)
             samples.append((sum(int(x.size) for x in shard),
                             sum(int(v.size) for v in o)))
         self._last_device_samples = samples
         return outs, self._combine(costs, len(sizes), ctx)
+
+    def _shard_dispatch(self, category, shard, ctx, kernel, weights,
+                        devices, slot):
+        """One shard through the inner backend on placement ``slot``."""
+        if devices is not None:
+            # only the frames are committed per device: the kernel /
+            # weights (and the masks derived from them) stay
+            # uncommitted, so jit moves them to whichever device
+            # each shard's stack pins the computation to — one
+            # cached mask and one content hash serve the whole fleet
+            shard = [jax.device_put(x, devices[slot % len(devices)])
+                     for x in shard]
+        return self.inner.run(category, shard, ctx, kernel=kernel,
+                              weights=weights)
+
+    def _observe_shard(self, ctx, category, d, dt_s, cost):
+        """Feed one healthy shard wall to the per-device straggler
+        watchdog; ``patience`` consecutive stragglers quarantine the
+        device (re-scattering subsequent groups across the survivors)."""
+        wd = getattr(ctx, "watchdog", None)
+        q = getattr(ctx, "quarantine", None)
+        if wd is None:
+            return
+        base = cost.total_s if cost is not None else None
+        if not wd.observe(("device", self.name, d), dt_s, base):
+            if q is not None:
+                q.note_healthy(("device", d))
+            return
+        tel = getattr(ctx, "telemetry", None)
+        if tel is not None:
+            tel.note_fault(category, "straggle")
+        tr = getattr(ctx, "tracer", None)
+        if tr is not None:
+            tr.instant("fault", lane=f"device{d}", category=category,
+                       device=d, kind="straggle", elapsed_s=dt_s)
+            tr.metrics.counter("faults", category=category,
+                               kind="straggle").inc()
+        if q is not None:
+            now = getattr(ctx, "clock", None)
+            ev = q.note_straggle(("device", d),
+                                 now() if now is not None else 0.0)
+            if ev is not None and tr is not None:
+                q0 = tr.now()
+                tr.record("quarantine", q0, q0 + (ev.until - ev.t),
+                          lane=f"device{d}", kind="async", key=str(ev.key),
+                          reason=ev.reason, level=ev.level)
+                tr.metrics.counter("quarantines", reason=ev.reason).inc()
+
+    def _note_device_fault(self, ctx, category, d, exc):
+        tel = getattr(ctx, "telemetry", None)
+        if tel is not None:
+            tel.note_fault(category, exc.kind)
+        tr = getattr(ctx, "tracer", None)
+        if tr is not None:
+            tr.instant("fault", lane=f"device{d}", category=category,
+                       device=d, kind=exc.kind)
+            tr.metrics.counter("faults", category=category,
+                               kind=exc.kind).inc()
+
+    def _quarantine_device(self, ctx, d, *, reason):
+        q = getattr(ctx, "quarantine", None)
+        if q is None:
+            return None
+        clock = getattr(ctx, "clock", None)
+        ev = q.quarantine(("device", d),
+                          clock() if clock is not None else 0.0,
+                          reason=reason)
+        tr = getattr(ctx, "tracer", None)
+        if tr is not None:
+            q0 = tr.now()
+            tr.record("quarantine", q0, q0 + (ev.until - ev.t),
+                      lane=f"device{d}", kind="async", key=str(ev.key),
+                      reason=ev.reason, level=ev.level)
+            tr.metrics.counter("quarantines", reason=ev.reason).inc()
+        return ev
 
     # -- (b) frame sharding: tile frames onto multiple apertures ---------------
     def _frame_conv(self, xs, ctx, kernel):

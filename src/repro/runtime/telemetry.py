@@ -105,6 +105,14 @@ class RuntimeTelemetry:
         # percentile view (p50/p95/p99) the multi-tenant SLO roadmap item
         # needs — totals say how much, percentiles say how consistently
         self._latency: dict[tuple[str, str], Histogram] = {}
+        # category -> fault-kind counter ("error" / "straggle" / "drift" /
+        # "device_loss" / "fallback" / "reroute"): the goodput-under-faults
+        # ledger the chaos bench and operators read
+        self.fault_counts: dict[str, collections.Counter] = \
+            collections.defaultdict(collections.Counter)
+        # category -> recovery-latency histogram: first fault of a dispatch
+        # to its successful (possibly degraded) completion
+        self._recovery: dict[str, Histogram] = {}
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -171,6 +179,42 @@ class RuntimeTelemetry:
                 st.samples_out += int(s_out)
         if self._t0 is not None:  # only in-window traffic offsets 'other'
             self._in_window_s += wall_s
+
+    def note_fault(self, category: str, kind: str) -> None:
+        """Count one fault event against ``category`` (the executor's
+        retry path, the sharded backend's per-device recovery, and the
+        drift-correction path all report through here)."""
+        self.fault_counts[category][kind] += 1
+
+    def note_recovery(self, category: str, dt_s: float) -> None:
+        """Record one recovery latency: the span from a dispatch's first
+        fault to the caller having a correct result again."""
+        self._recovery.setdefault(category, Histogram()).record(max(dt_s,
+                                                                    0.0))
+
+    def faults_total(self, category: str | None = None) -> int:
+        """Total fault events observed (for ``category``, or overall)."""
+        if category is not None:
+            return sum(self.fault_counts.get(category, {}).values())
+        return sum(sum(c.values()) for c in self.fault_counts.values())
+
+    def recovery_stats(self, category: str | None = None) -> dict | None:
+        """``{n, mean_s, p50_s, p95_s}`` of recovery latency for
+        ``category`` (merged across categories when None); ``None`` when
+        nothing ever needed recovering."""
+        merged: Histogram | None = None
+        for cat, h in self._recovery.items():
+            if category is not None and cat != category:
+                continue
+            if merged is None:
+                merged = h.copy()
+            else:
+                merged.merge(h)
+        if merged is None or merged.n == 0:
+            return None
+        return {"n": merged.n, "mean_s": merged.total / merged.n,
+                "p50_s": merged.percentile(50),
+                "p95_s": merged.percentile(95)}
 
     def discount_window(self, wall_s: float) -> None:
         """Exclude ``wall_s`` of measurement overhead (e.g. the fidelity
@@ -384,6 +428,13 @@ class RuntimeTelemetry:
                 self._latency[key].merge(h)
             else:
                 self._latency[key] = h.copy()
+        for cat, counts in other.fault_counts.items():
+            self.fault_counts[cat].update(counts)
+        for cat, h in other._recovery.items():
+            if cat in self._recovery:
+                self._recovery[cat].merge(h)
+            else:
+                self._recovery[cat] = h.copy()
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
@@ -392,6 +443,8 @@ class RuntimeTelemetry:
         self.device_stats.clear()
         self._submits.clear()
         self._latency.clear()
+        self.fault_counts.clear()
+        self._recovery.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0
@@ -421,6 +474,14 @@ class RuntimeTelemetry:
                     f"           wall p50={h.percentile(50):.3g}s "
                     f"p95={h.percentile(95):.3g}s "
                     f"p99={h.percentile(99):.3g}s (n={h.n})")
+        for cat, counts in sorted(self.fault_counts.items()):
+            parts = [f"{k} x{c}" for k, c in sorted(counts.items())]
+            row = f"  faults[{cat}]: " + "; ".join(parts)
+            rec = self.recovery_stats(cat)
+            if rec is not None:
+                row += (f" | recovery p50={rec['p50_s']:.3g}s "
+                        f"p95={rec['p95_s']:.3g}s (n={rec['n']})")
+            rows.append(row)
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "
                         f"recorded={self.recorded_s():.4g}s")

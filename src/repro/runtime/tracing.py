@@ -15,6 +15,15 @@ with sharded dispatch additionally emitting one ``scatter`` child span per
 device, so host-side scatter/gather staging — the ROADMAP's suspect for the
 sharded wall regression — is finally visible rather than inferred.
 
+Fault handling (``repro.runtime.faults``) adds its own span vocabulary on
+the ``sched`` and per-device lanes: ``fault`` instants (kind = error /
+straggle / drift / device_loss), ``retry`` spans covering each backoff
+window, ``fallback`` instants marking graceful degradation to the host
+backend, and ``quarantine`` spans covering a device's or category's
+exclusion window.  None of these carry charged time — the reconcile /
+drift contract reads only ``invocation`` trees — so fault observability
+can never unbalance the wall accounting.
+
 Design constraints (all load-bearing):
 
 * **Zero dependencies, zero default overhead.**  Tracing is opt-in
