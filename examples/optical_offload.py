@@ -56,6 +56,14 @@ batching story prices it:
                  quarantined — every frame still retires, in order, within
                  the converters' error budget, with the whole fault story
                  visible in fault counters and recovery percentiles.
+  10. reuse    — turn on the operand residency cache
+                 (``OffloadExecutor(residency=True)``) and re-serve a conv
+                 layer stack that re-uses its frames and kernel: the first
+                 flush stages and quantizes everything (and registers it
+                 resident), every later flush skips the write-side DAC
+                 crossing entirely — priced read-side-only
+                 (``cost.dac_s == 0``) and bit-equal to the re-staged
+                 path, with the hit/miss ledger in telemetry.
 
 Executors are context managers: each ``with`` block below guarantees no
 pending, held, or in-flight group outlives the demo that created it.
@@ -133,6 +141,7 @@ def main() -> None:
     run_tiled_demo(imgs)
     run_traced_demo(imgs, kernels)
     run_chaos_demo()
+    run_residency_demo()
 
 
 def run_plan_demo(executor: OffloadExecutor, imgs, kernels) -> None:
@@ -377,6 +386,46 @@ def run_chaos_demo(calls: int = 32, rate: float = 0.10) -> None:
           f"{all(h.ready for h in handles)}; worst rel error {worst:.2e} "
           f"(ENOB bound {bound:.2e}) -> within budget: {worst <= bound}")
     print(ex.quarantine.summary(ex.now()))
+
+
+def run_residency_demo(calls: int = 8) -> None:
+    # --- 10. reuse: operand residency across repeated flushes -----------------
+    # A conv layer stack that re-serves the SAME frames through the SAME
+    # kernel (inference over a fixed activation set, an iterative solve,
+    # a re-scored beam) pays the write-side DAC crossing once.  With
+    # ``residency=True`` the first flush stages + quantizes every operand
+    # and registers it resident under the staging budget; the second flush
+    # finds everything already on the device, skips the write side
+    # entirely, and is priced read-side-only: cost.dac_s == 0 while the
+    # results stay bit-equal to a residency-off executor.
+    key = jax.random.PRNGKey(11)
+    imgs = [jax.random.uniform(jax.random.fold_in(key, i), (128, 128))
+            for i in range(calls)]
+    kernel = jnp.zeros((128, 128)).at[:3, :3].set(
+        0.05 * jax.random.normal(jax.random.fold_in(key, 99), (3, 3))
+    ).at[0, 0].add(0.5)
+
+    with OffloadExecutor(BATCHED_4F, max_batch=calls,
+                         residency=True) as ex:
+        first = [ex.submit("conv", x, kernel=kernel) for x in imgs]
+        ex.flush()
+        second = [ex.submit("conv", x, kernel=kernel) for x in imgs]
+        ex.flush()
+        hit_rate = ex.telemetry.residency_hit_rate("conv")
+        ledger = ex.residency.summary()
+    with OffloadExecutor(BATCHED_4F, max_batch=calls) as plain:
+        refs = [plain.submit("conv", x, kernel=kernel) for x in imgs]
+
+    bit_equal = all(bool(jnp.array_equal(s.value, r.value))
+                    for s, r in zip(second, refs))
+    print(f"\n-- residency: serve {calls} conv frames twice, "
+          f"pay the DAC once --")
+    print(f"first flush  (cold): dac {first[0].cost.dac_s * 1e6:8.2f}us/call "
+          f"total {first[0].cost.total_s * 1e6:8.2f}us/call")
+    print(f"second flush (hit):  dac {second[0].cost.dac_s * 1e6:8.2f}us/call "
+          f"total {second[0].cost.total_s * 1e6:8.2f}us/call")
+    print(f"hit rate {hit_rate:.0%}; bit-equal to residency-off: {bit_equal}")
+    print(ledger)
 
 
 if __name__ == "__main__":

@@ -188,19 +188,31 @@ class OpticalFourierAcceleratorSpec:
                         analog_s=analog_s, host_s=host_s)
 
     def _batched_sides(self, n_in: int, n_out: int, batch: int,
+                       write_batch: int | None = None,
                        ) -> tuple[float, float, float, float, float, int]:
         """Unoverlapped resource totals of ONE invocation carrying
         ``batch`` inputs on one device: (dac_s, adc_s, intf_in, intf_out,
         analog_s, frames).  The write side is dac + intf_in; the
         analog+read side is adc + intf_out + analog.  Shared by the
         monolithic, tiled, and sharded pricing paths so all three charge
-        identical per-invocation physics."""
+        identical per-invocation physics.
+
+        ``write_batch`` (default: ``batch``) is how many of the inputs
+        actually cross the write path this invocation — the rest are
+        *resident* on the device from an earlier staging, so they pay no
+        DAC conversion, no SLM link transfer, and no write-side frame
+        handshake.  The read side always prices the full ``batch``: every
+        result still crosses the detector + ADC."""
         caps = self.phase_shift_captures
-        frames = max(1, math.ceil(batch * n_in / max(self.usable_pixels, 1)))
-        dac_s = self.dac.time_for(batch * n_in, self.dac_lanes)
+        px = max(self.usable_pixels, 1)
+        frames = max(1, math.ceil(batch * n_in / px))
+        wb = batch if write_batch is None else max(0, min(write_batch, batch))
+        wframes = frames if wb == batch \
+            else math.ceil(wb * n_in / px)
+        dac_s = self.dac.time_for(wb * n_in, self.dac_lanes) if wb else 0.0
         adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
-        intf_in = (batch * n_in / self.slm_interface_hz
-                   + frames * self.interface_latency_s)
+        intf_in = (wb * n_in / self.slm_interface_hz
+                   + wframes * self.interface_latency_s)
         intf_out = caps * batch * n_out / self.camera_interface_hz
         analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
                     + self.time_of_flight_s())
@@ -212,7 +224,10 @@ class OpticalFourierAcceleratorSpec:
                           n_devices: int = 1,
                           hold_s: float = 0.0,
                           tile_k: int | None = None,
-                          mem_budget=None) -> StepCost:
+                          mem_budget=None,
+                          resident_frames: int = 0,
+                          weight_samples: int = 0,
+                          resident_weights: int = 0) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
         ``hold_s`` is the queueing delay a continuous-batching scheduler
@@ -277,6 +292,21 @@ class OpticalFourierAcceleratorSpec:
         method, e.g. ``repro.runtime.tiling.MemoryBudget``) and the tile
         depth is derived from the byte budget exactly as the executor
         derives it — same frame cap, same even-split divisor refinement.
+
+        ``resident_frames`` prices *operand residency* (the runtime's
+        ``ResidencyCache``): that many of the batch's inputs are already
+        staged on the device from an earlier invocation, so they skip the
+        whole write side — no DAC conversion, no SLM link transfer, no
+        write-side frame handshake — while the read side still prices the
+        full batch (every result crosses the detector + ADC).  A fully
+        resident batch therefore costs ``dac_s == 0``: a hit is
+        read-side-only, which is exactly what the dispatcher does with a
+        residency hit.  ``weight_samples`` is the kernel/weight operand's
+        sample count written to the Fourier-plane SLM this invocation
+        (charged once, on the write side), and ``resident_weights`` the
+        subset of those samples already resident — a resident kernel
+        writes nothing.  All three default to 0: the historical price,
+        bit for bit.
         """
         if n_out is None:
             n_out = n_in
@@ -286,6 +316,8 @@ class OpticalFourierAcceleratorSpec:
             raise ValueError("pipeline_depth must be >= 1")
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
+        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
+            raise ValueError("residency counts must be >= 0")
         if tile_k is None and mem_budget is not None:
             tile_k = mem_budget.tile_for_group(
                 n_in, n_out, batch, pipeline_depth=pipeline_depth)
@@ -294,10 +326,17 @@ class OpticalFourierAcceleratorSpec:
         sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
         dac_s = adc_s = intf_in = intf_out = analog_s = sync_s = 0.0
         stages = 0
+        remaining = min(int(resident_frames), batch)
         for b in sizes:
             eff = min(n_devices, b)
+            pb = math.ceil(b / eff)
+            res_b = min(remaining, b)
+            remaining -= res_b
+            # the tile's non-resident share crosses the write path, split
+            # per device the same way the frames themselves are
+            wb = pb - min(math.ceil(res_b / eff), pb)
             d, a, i1, i2, an, fr = self._batched_sides(
-                n_in, n_out, math.ceil(b / eff))
+                n_in, n_out, pb, write_batch=wb)
             dac_s += d
             adc_s += a
             intf_in += i1
@@ -306,6 +345,10 @@ class OpticalFourierAcceleratorSpec:
             stages += fr
             if n_devices > 1:
                 sync_s += eff * self.device_sync_s
+        w_extra = max(0, int(weight_samples) - int(resident_weights))
+        if w_extra:
+            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
+            intf_in += w_extra / self.slm_interface_hz
         if pipeline_depth >= 2 and stages > 1:
             write_side = dac_s + intf_in
             read_side = adc_s + intf_out + analog_s
@@ -365,7 +408,10 @@ class OpticalMVMAcceleratorSpec:
                           n_devices: int = 1,
                           hold_s: float = 0.0,
                           tile_k: int | None = None,
-                          mem_budget=None) -> StepCost:
+                          mem_budget=None,
+                          resident_frames: int = 0,
+                          weight_samples: int = 0,
+                          resident_weights: int = 0) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
 
         ``hold_s`` charges continuous-batching queueing delay to the
@@ -393,6 +439,16 @@ class OpticalMVMAcceleratorSpec:
         ``tile_for_group(n_in, n_out, k, pipeline_depth=...)``
         (``repro.runtime.tiling.MemoryBudget``) — the executor's exact
         resolution, divisor refinement included.
+
+        ``resident_frames`` prices operand residency exactly as on the 4f
+        family: that many activation sets are already loaded on the device,
+        so they pay no input DAC conversion, while the read side (ADC,
+        optical pass) still prices the full batch.  ``weight_samples`` /
+        ``resident_weights`` charge the write of a *non-resident* weight
+        panel through the DAC once per invocation (``matmul_cost`` prices
+        weights as held in the optical domain — residency is the mechanism
+        that keeps that assumption honest).  Defaults of 0 reproduce the
+        historical price bit for bit.
         """
         if n_out is None:
             n_out = n_in
@@ -402,6 +458,8 @@ class OpticalMVMAcceleratorSpec:
             raise ValueError("pipeline_depth must be >= 1")
         if n_devices < 1:
             raise ValueError("n_devices must be >= 1")
+        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
+            raise ValueError("residency counts must be >= 0")
         if tile_k is None and mem_budget is not None:
             tile_k = mem_budget.tile_for_group(
                 n_in, n_out, batch, pipeline_depth=pipeline_depth)
@@ -410,16 +468,24 @@ class OpticalMVMAcceleratorSpec:
         sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
         dac_s = adc_s = analog_s = intf_s = 0.0
         stages = 0
+        remaining = min(int(resident_frames), batch)
         for b in sizes:
             eff = min(n_devices, b)
             pb = math.ceil(b / eff)
-            dac_s += self.dac.time_for(pb * n_in, self.dac_lanes)
+            res_b = min(remaining, b)
+            remaining -= res_b
+            wb = pb - min(math.ceil(res_b / eff), pb)
+            if wb:
+                dac_s += self.dac.time_for(wb * n_in, self.dac_lanes)
             adc_s += self.adc.time_for(pb * n_out, self.adc_lanes)
             analog_s += pb * self.optical_pass_s
             intf_s += self.interface_latency_s
             stages += pb
             if n_devices > 1:
                 intf_s += eff * self.device_sync_s
+        w_extra = max(0, int(weight_samples) - int(resident_weights))
+        if w_extra:
+            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
         if pipeline_depth >= 2 and stages > 1:
             hidden = 1.0 / stages
             if dac_s <= adc_s + analog_s:
@@ -430,12 +496,21 @@ class OpticalMVMAcceleratorSpec:
         return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=intf_s,
                         analog_s=analog_s, host_s=host_s, hold_s=hold_s)
 
-    def matmul_cost(self, m: int, k: int, n: int) -> StepCost:
+    def matmul_cost(self, m: int, k: int, n: int, *,
+                    weight_write: bool = False) -> StepCost:
         """Cost of an (m,k) @ (k,n) matmul tiled onto the optical core.
 
         The (k,n) operand is treated as weights (pre-loaded); the (m,k)
         activations stream through the converters.  Tiling: ceil(k/rows) *
         ceil(n/cols) passes per activation row-block.
+
+        ``weight_write=True`` additionally charges loading the (k,n)
+        weight panel through the DAC — the price of a residency *miss*.
+        The default (False) is the historical weight-stationary assumption:
+        the panel is already resident, loading amortized away.  The
+        runtime's residency cache is what makes the default honest — it
+        charges the write on the first sighting of a panel and skips it on
+        hits, instead of assuming every panel was always resident.
         """
         row_tiles = math.ceil(k / self.rows)
         col_tiles = math.ceil(n / self.cols)
@@ -443,6 +518,8 @@ class OpticalMVMAcceleratorSpec:
         n_in = m * k * col_tiles          # activations re-enter per col tile
         n_out = m * n * row_tiles         # partials exit per row tile
         dac_s = self.dac.time_for(n_in, self.dac_lanes)
+        if weight_write:
+            dac_s += self.dac.time_for(k * n, self.dac_lanes)
         adc_s = self.adc.time_for(n_out, self.adc_lanes)
         return StepCost(dac_s=dac_s, adc_s=adc_s, interface_s=0.0,
                         analog_s=passes * self.optical_pass_s)

@@ -62,6 +62,17 @@ that runs it.  Module map:
                budget.  ``tile_k=1`` degenerates to looped, ``>= K`` to
                monolithic — the runtime-equivalence invariant covers all
                three.
+  residency  — ``ResidencyCache``: per-device operand residency under the
+               tiling ``MemoryBudget`` — content-keyed (operand digest +
+               converter operating point) entries for flush-group frame
+               stacks, conv kernels, matmul weight panels, and sharded
+               per-device shard placements, LRU-evicted against the same
+               staging budget tiles spend from.  A resident operand skips
+               the write-side DAC crossing and host staging entirely
+               (priced read-side-only by ``batched_step_cost``); hit /
+               miss / eviction / invalidation counters land in
+               ``RuntimeTelemetry`` and ``cache`` instants in the tracer.
+               Opt-in: ``OffloadExecutor(residency=True)``.
   router     — ``PlanRouter``: applies an ``OffloadPlan``'s decisions as a
                category->backend routing table and closes the
                profile -> plan -> execute -> re-profile loop via ``replan``
@@ -148,6 +159,12 @@ from repro.runtime.metrics import (
     StageDrift,
     drift_report,
 )
+from repro.runtime.residency import (
+    ResidencyCache,
+    ResidencyEntry,
+    operating_point,
+    residency_key,
+)
 from repro.runtime.router import PlanRouter
 from repro.runtime.scheduler import ManualClock, OffloadScheduler
 from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
@@ -198,6 +215,10 @@ __all__ = [
     "FidelityChecker",
     "FidelityReport",
     "enob_error_bound",
+    "ResidencyCache",
+    "ResidencyEntry",
+    "operating_point",
+    "residency_key",
     "PlanRouter",
     "ManualClock",
     "OffloadScheduler",

@@ -72,6 +72,7 @@ from repro.kernels.optical_dft import (
     dft_stage1_batched,
     dft_stage2_batched,
 )
+from repro.runtime.residency import residency_key
 from repro.runtime.tiling import BlockPlan, MemoryBudget, choose_blocks
 
 __all__ = [
@@ -87,6 +88,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "stage_group",
 ]
 
 CATEGORIES = ("fft", "conv", "matmul")
@@ -157,6 +159,13 @@ class BackendContext:
     quarantine: "object | None" = None
     watchdog: "object | None" = None
     telemetry: "object | None" = None
+    # The owning executor's operand residency cache
+    # (``repro.runtime.residency.ResidencyCache``), or None for the
+    # historical stage-every-flush behavior.  With a cache attached, the
+    # shared ``stage_group`` helper serves staged stacks from it (and the
+    # sharded backend keeps per-device placement sets), so repeat flushes
+    # of unchanged operands skip staging and are priced read-side-only.
+    residency: "object | None" = None
 
     def blocks_for(self, batch: int, h: int, w: int) -> "BlockPlan":
         """Resolved Pallas block sizes for a ``(batch, h, w)`` stacked DFT
@@ -264,6 +273,59 @@ def _samples(x: jax.Array) -> int:
     return int(x.size)
 
 
+def stage_group(category: str, xs: Sequence[jax.Array], ctx: BackendContext,
+                *, single_expand: bool = False) -> tuple[jax.Array, int]:
+    """Stack a same-shape group into the dispatch operand, serving the
+    staged stack from the context's residency cache on a content hit.
+
+    Returns ``(stack, resident)`` where ``resident`` is how many of the
+    group's items were already staged (``len(xs)`` on a hit, 0 otherwise —
+    the stack is the staging unit, so residency is all-or-nothing here;
+    partial residency lives at the sharded backend's per-shard grain).
+    The analog backends thread ``resident`` into
+    ``batched_step_cost(resident_frames=...)`` so the modeled price
+    matches what dispatch just skipped.  With no cache attached this is
+    exactly the historical ``jnp.stack`` (or the host's single-item
+    expand), bit for bit.
+
+    Rerunning the same jitted computation on the same cached stack yields
+    bit-identical results, which is how the runtime-equivalence invariant
+    extends to cached == re-staged.
+    """
+    res = getattr(ctx, "residency", None)
+    if res is None:
+        if single_expand and len(xs) == 1:
+            return xs[0][None], 0
+        return jnp.stack(list(xs)), 0
+    key = residency_key(ctx, xs, "frame")
+    stack = res.lookup("host", key, category=category, ctx=ctx)
+    if stack is not None:
+        return stack, len(xs)
+    if single_expand and len(xs) == 1:
+        stack = xs[0][None]
+    else:
+        stack = jnp.stack(list(xs))
+    res.store("host", key, stack,
+              int(getattr(stack, "nbytes", stack.size * 4)),
+              category=category, kind="frame", ctx=ctx)
+    return stack, 0
+
+
+def _operand_resident(category: str, arr: jax.Array, ctx: BackendContext,
+                      kind: str) -> bool:
+    """Whether a kernel/weight operand is resident (registering it when
+    not): True means this invocation writes no weight samples."""
+    res = getattr(ctx, "residency", None)
+    if res is None or arr is None:
+        return False
+    key = residency_key(ctx, [arr], kind)
+    if res.lookup("host", key, category=category, ctx=ctx) is not None:
+        return True
+    res.store("host", key, arr, int(getattr(arr, "nbytes", arr.size * 4)),
+              category=category, kind=kind, ctx=ctx)
+    return False
+
+
 # --- host: the digital baseline ----------------------------------------------
 
 # Each op accepts a leading batch axis natively: fft2/ifft2 act on the last
@@ -292,7 +354,7 @@ class HostBackend(ExecutionBackend):
     name = "host"
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
-        stack = xs[0][None] if len(xs) == 1 else jnp.stack(list(xs))
+        stack, _ = stage_group(category, xs, ctx, single_expand=True)
         if category == "fft":
             out = _host_fft_intensity(stack)
         elif category == "conv":
@@ -392,31 +454,49 @@ class OpticalSimBackend(ExecutionBackend):
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
         batch = len(xs)
         n_in = _samples(xs[0])
-        stack = jnp.stack(list(xs))
+        stack, resident = stage_group(category, xs, ctx)
         depth = ctx.pipeline_depth
+        priced_residency = getattr(ctx, "residency", None) is not None
         if category == "fft":
             out = self._fft_batched(stack, ctx)
             cost = ctx.spec.batched_step_cost(n_in, _samples(out[0]),
                                               batch=batch,
-                                              pipeline_depth=depth)
+                                              pipeline_depth=depth,
+                                              resident_frames=resident)
         elif category == "conv":
             mask = ctx.mask(kernel)
+            # registered before the mask build so a repeat kernel prices as
+            # resident even though ctx.mask memoizes the mask either way
+            k_resident = _operand_resident(category, kernel, ctx, "kernel")
             out = _optical_conv_batched(stack, mask, jnp.sum(kernel),
                                         ctx.sim_params)
             spec4 = dataclasses.replace(ctx.spec,
                                         phase_shift_captures=CONV_CAPTURES)
-            cost = spec4.batched_step_cost(n_in, _samples(out[0]),
-                                           batch=batch, pipeline_depth=depth)
+            k_n = _samples(kernel) if priced_residency else 0
+            cost = spec4.batched_step_cost(
+                n_in, _samples(out[0]), batch=batch, pipeline_depth=depth,
+                resident_frames=resident, weight_samples=k_n,
+                resident_weights=k_n if k_resident else 0)
         elif category == "matmul":
+            w_resident = _operand_resident(category, weights, ctx, "weights")
             out = _optical_matmul_batched(stack, weights,
                                           dac_bits=ctx.spec.dac.bits,
                                           adc_bits=ctx.spec.adc.bits)
             m, k = xs[0].shape
             n = weights.shape[-1]
             # Batching stacks activations along m: one streamed invocation.
+            # With residency priced, a non-resident weight panel charges
+            # its one-time DAC load (weight_write) and fully resident
+            # activations drop the streaming DAC term: hits read-side-only.
+            w_write = priced_residency and not w_resident
+            cost = ctx.spec.matmul_cost(batch * m, k, n,
+                                        weight_write=w_write)
+            if resident >= batch:
+                act_free = ctx.spec.dac.time_for(k * n, ctx.spec.dac_lanes) \
+                    if w_write else 0.0
+                cost = dataclasses.replace(cost, dac_s=act_free)
             cost = dataclasses.replace(
-                ctx.spec.matmul_cost(batch * m, k, n),
-                interface_s=ctx.spec.interface_latency_s)
+                cost, interface_s=ctx.spec.interface_latency_s)
         else:
             raise ValueError(f"unknown category {category!r}")
         return list(out), cost

@@ -69,6 +69,7 @@ from repro.runtime.faults import (
     advance_or_sleep,
 )
 from repro.runtime.fidelity import FidelityChecker, FidelityReport
+from repro.runtime.residency import ResidencyCache
 from repro.runtime.telemetry import RuntimeTelemetry
 from repro.runtime.tiling import MemoryBudget, choose_tile, tile_sizes
 from repro.runtime.tracing import Span, Tracer
@@ -240,6 +241,19 @@ class OffloadExecutor:
         immediately.  The policy also configures the dispatch watchdog
         (straggler deadlines from modeled wall x trailing median) and the
         quarantine windows.
+      residency: the device-side operand residency cache
+        (:class:`~repro.runtime.residency.ResidencyCache`).  ``None``
+        (default) keeps the historical stage-every-flush behavior — every
+        modeled price and every result is bit-identical to before.  Pass
+        ``True`` to build a cache sized against ``mem_budget`` (residency
+        and tile staging share the budget's spendable bytes), or a
+        pre-built :class:`ResidencyCache` to share one across executors.
+        With a cache attached, repeat flushes of unchanged operands skip
+        host staging and are priced read-side-only
+        (``batched_step_cost(resident_frames=...)``), sharded dispatch
+        keeps per-device resident shard sets, and hit/miss/eviction
+        counters land in telemetry (``residency_counts``) and the trace
+        (``cache`` instants).
       tracer: optional :class:`~repro.runtime.tracing.Tracer`.  When set,
         every dispatch emits a boundary-attributed span tree (submit ->
         held -> release -> invocation -> stage -> compute ->
@@ -269,6 +283,7 @@ class OffloadExecutor:
                  tile_k: int | None = None,
                  clock: Callable[[], float] = time.perf_counter,
                  retry: RetryPolicy | None = None,
+                 residency: "ResidencyCache | bool | None" = None,
                  tracer: Tracer | None = None) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -304,6 +319,12 @@ class OffloadExecutor:
         self.ctx.quarantine = self.quarantine
         self.ctx.watchdog = self._watchdog
         self.ctx.telemetry = self.telemetry
+        if residency is True:
+            residency = ResidencyCache(mem_budget)
+        elif residency is False:
+            residency = None
+        self.residency: ResidencyCache | None = residency
+        self.ctx.residency = residency
         self.max_batch = max_batch
         self.pipeline_depth = pipeline_depth
         self.n_devices = n_devices
@@ -400,11 +421,21 @@ class OffloadExecutor:
             n_out = (int(x.shape[0]) * int(weights.shape[-1])
                      if category == "matmul" and weights is not None
                      else int(x.size))
-            t = choose_tile(int(x.size), depth, self.mem_budget,
+            t = choose_tile(int(x.size), depth, self.effective_mem_budget(),
                             n_out=n_out,
                             dtype_bytes=max(1, x.dtype.itemsize),
                             pipeline_depth=self.pipeline_depth).tile_k
         return max(1, min(int(t), depth))
+
+    def effective_mem_budget(self) -> MemoryBudget:
+        """The staging budget tiles are chosen against *right now*: the
+        configured budget minus whatever the residency cache currently
+        pins (resident stacks are live allocations in the same pool — see
+        ``MemoryBudget.minus``).  With no cache this is exactly
+        ``mem_budget``."""
+        if self.residency is None:
+            return self.mem_budget
+        return self.residency.effective_budget(self.mem_budget)
 
     def _backend(self, name: str) -> ExecutionBackend:
         if name not in self._backends:
@@ -475,9 +506,21 @@ class OffloadExecutor:
     def submit(self, category: str, x: jax.Array, *,
                kernel: jax.Array | None = None,
                weights: jax.Array | None = None,
-               backend: str | None = None) -> OffloadResult:
-        """Queue one call; returns a handle materialized at ``flush``."""
+               backend: str | None = None,
+               reuse: str | None = None) -> OffloadResult:
+        """Queue one call; returns a handle materialized at ``flush``.
+
+        ``reuse`` names an explicit residency token: the caller promises
+        that every submission under this token carries the same operand
+        content, so after the first sighting the content digest is served
+        from the token instead of re-hashing the array
+        (:meth:`ResidencyCache.note_token`).  Purely an optimization over
+        the automatic digest path — with no residency cache attached it is
+        accepted and ignored.
+        """
         name = self._validate(category, backend, kernel, weights)
+        if reuse is not None and self.residency is not None:
+            self.residency.note_token(reuse, x, self.ctx)
         result = OffloadResult(self)
         t = self._clock()
         self.telemetry.note_submit(category, t)
@@ -532,14 +575,23 @@ class OffloadExecutor:
             batch = self.max_batch_for(category)
         if batch < 1:
             raise ValueError("batch must be >= 1")
-        self.ctx.n_devices = self.n_devices_for(category)
+        # the category fan-out is written for shard-shape priming but must
+        # not leak into the shared context after the warm call — a context
+        # consumer between warm and the next dispatch would see one
+        # category's stale device count (dispatch rewrites it, warm must
+        # restore it, same as the tracer/watchdog below)
+        saved_nd, self.ctx.n_devices = \
+            self.ctx.n_devices, self.n_devices_for(category)
         tile = self.resolve_tile_k(category, x, batch, weights=weights)
         # warm-up runs are not workload: suppress backend-side tracing so
-        # priming does not litter the trace with orphan device spans, and
-        # the straggler watchdog so first-call compile time can never
-        # strike (let alone quarantine) a healthy device
+        # priming does not litter the trace with orphan device spans, the
+        # straggler watchdog so first-call compile time can never strike
+        # (let alone quarantine) a healthy device, and the residency cache
+        # so priming stacks neither pollute the resident set nor skew the
+        # hit-rate ledger the router replans from
         saved, self.ctx.tracer = self.ctx.tracer, None
         saved_wd, self.ctx.watchdog = self.ctx.watchdog, None
+        saved_res, self.ctx.residency = self.ctx.residency, None
         try:
             for b in sorted({1} | set(tile_sizes(batch, tile))):
                 outs, _ = be.run(category, [x] * b, self.ctx,
@@ -548,6 +600,8 @@ class OffloadExecutor:
         finally:
             self.ctx.tracer = saved
             self.ctx.watchdog = saved_wd
+            self.ctx.residency = saved_res
+            self.ctx.n_devices = saved_nd
 
     @property
     def pending(self) -> int:
@@ -972,10 +1026,18 @@ class OffloadExecutor:
             if tr is not None and f.span is not None:
                 sh = tr.begin("fidelity-shadow", lane="host", kind="sync",
                               parent=f.span, category=f.chunk[0].category)
-            refs, _ = self._backend("host").run(
-                f.chunk[0].category, [p.x for p in f.chunk], self.ctx,
-                kernel=f.chunk[0].kernel, weights=f.chunk[0].weights)
-            _block(refs)
+            # the shadow reference is a validation probe, not workload:
+            # it must neither serve from nor populate the residency cache,
+            # or shadow traffic would inflate hit rates and evict operands
+            # the real dispatch path still needs
+            saved_res, self.ctx.residency = self.ctx.residency, None
+            try:
+                refs, _ = self._backend("host").run(
+                    f.chunk[0].category, [p.x for p in f.chunk], self.ctx,
+                    kernel=f.chunk[0].kernel, weights=f.chunk[0].weights)
+                _block(refs)
+            finally:
+                self.ctx.residency = saved_res
             spec = self.ctx.spec
             enob = min(spec.dac.effective_bits, spec.adc.effective_bits)
             report = self.fidelity.check(f.chunk[0].category, f.be.name,

@@ -108,10 +108,12 @@ class PlanRouter:
         ``deadline_s``, the modeled batched invocation — priced from the
         category's *observed* per-call boundary traffic at the executor's
         pipeline depth, its sharded device fan-out (max-over-devices plus
-        sync) AND its memory-budgeted tile depth (each tile pays its own
-        prologue, tiles overlap two-deep) — must still finish within the
-        deadline, so the depth is halved until it fits.  Categories with no
-        recorded traffic are left at the executor's global ceilings.
+        sync), its memory-budgeted tile depth (each tile pays its own
+        prologue, tiles overlap two-deep) AND its measured residency hit
+        rate (frames the device already holds skip the write-side DAC
+        crossing) — must still finish within the deadline, so the depth is
+        halved until it fits.  Categories with no recorded traffic are
+        left at the executor's global ceilings.
 
         The device count rides the batch (group sharding can never use
         more devices than the group has items: ``n = min(device cap, k)``)
@@ -155,12 +157,21 @@ class PlanRouter:
             def tile_for(depth: int) -> int:
                 if n_in <= 0:
                     return depth
-                t = choose_tile(n_in, depth, ex.mem_budget,
+                # resident operands occupy the same staging budget tiles
+                # spend from, so the tile choice here must see the budget
+                # the dispatcher will actually have left
+                t = choose_tile(n_in, depth, ex.effective_mem_budget(),
                                 n_out=n_out or None,
                                 pipeline_depth=ex.pipeline_depth).tile_k
                 if tile_cap is not None:
                     t = min(t, tile_cap)
                 return max(1, min(t, depth))
+
+            # the measured residency hit rate projects how many of a
+            # k-deep group's frames the device already holds: a cache that
+            # is absorbing most of the write traffic lets a deeper batch
+            # fit the same deadline, so the halving loop prices it in
+            hit_rate = telemetry.residency_hit_rate(cat) or 0.0
 
             if (deadline_s is not None and n_in > 0
                     and hasattr(spec, "batched_step_cost")):
@@ -176,6 +187,7 @@ class PlanRouter:
                         pipeline_depth=ex.pipeline_depth,
                         n_devices=max(1, min(n_cap, k)),
                         tile_k=tile_for(k),
+                        resident_frames=int(round(hit_rate * k)),
                         ).total_s > deadline_s:
                     k //= 2
             k = max(k, 1)

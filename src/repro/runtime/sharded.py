@@ -69,6 +69,7 @@ from repro.runtime.backends import (
     ideal_step_cost,
     register_backend,
 )
+from repro.runtime.residency import residency_key
 
 __all__ = ["ShardedOpticalBackend", "shard_sizes", "kernel_halo"]
 
@@ -286,7 +287,7 @@ class ShardedOpticalBackend(ExecutionBackend):
                     raise DeviceLostError(d)
                 with _device_span(ctx, d, size):
                     o, c = self._shard_dispatch(category, shard, ctx, kernel,
-                                                weights, devices, i)
+                                                weights, devices, i, device=d)
             except FaultError as e:
                 # the shard's device failed mid-scatter: quarantine it and
                 # re-run the SAME shard on a surviving device — every frame
@@ -296,7 +297,7 @@ class ShardedOpticalBackend(ExecutionBackend):
                 sv = next((s for s in pool if s != d and s not in lost), d)
                 with _device_span(ctx, sv, size):
                     o, c = self._shard_dispatch(category, shard, ctx, kernel,
-                                                weights, devices, i)
+                                                weights, devices, i, device=sv)
                 d = sv
             else:
                 dt = (clock() - t0) if clock is not None else 0.0
@@ -309,9 +310,26 @@ class ShardedOpticalBackend(ExecutionBackend):
         return outs, self._combine(costs, len(sizes), ctx)
 
     def _shard_dispatch(self, category, shard, ctx, kernel, weights,
-                        devices, slot):
-        """One shard through the inner backend on placement ``slot``."""
+                        devices, slot, *, device=0):
+        """One shard through the inner backend on placement ``slot``.
+
+        With a residency cache attached, the committed shard list is kept
+        under the LOGICAL device label ``("device", d)``: a re-scatter of
+        the same frames to the same device skips the ``device_put`` entirely
+        (the per-shard grain is what makes partial residency real — only
+        the shards whose content changed re-ship).  Quarantining a device
+        drops its resident set, so a recovered device always re-stages.
+        """
         if devices is not None:
+            res = getattr(ctx, "residency", None)
+            key = None
+            if res is not None:
+                key = residency_key(ctx, shard, "shard")
+                cached = res.lookup(("device", device), key,
+                                    category=category, ctx=ctx)
+                if cached is not None:
+                    return self.inner.run(category, cached, ctx,
+                                          kernel=kernel, weights=weights)
             # only the frames are committed per device: the kernel /
             # weights (and the masks derived from them) stay
             # uncommitted, so jit moves them to whichever device
@@ -319,6 +337,11 @@ class ShardedOpticalBackend(ExecutionBackend):
             # cached mask and one content hash serve the whole fleet
             shard = [jax.device_put(x, devices[slot % len(devices)])
                      for x in shard]
+            if res is not None:
+                nbytes = sum(int(getattr(x, "nbytes", x.size * 4))
+                             for x in shard)
+                res.store(("device", device), key, list(shard), nbytes,
+                          category=category, kind="shard", ctx=ctx)
         return self.inner.run(category, shard, ctx, kernel=kernel,
                               weights=weights)
 
@@ -367,6 +390,12 @@ class ShardedOpticalBackend(ExecutionBackend):
                                kind=exc.kind).inc()
 
     def _quarantine_device(self, ctx, d, *, reason):
+        # a quarantined device's memory is no longer trustworthy (and the
+        # scheduler will route around it anyway): drop its resident set so
+        # nothing serves stale bytes when it rejoins the pool
+        res = getattr(ctx, "residency", None)
+        if res is not None:
+            res.invalidate_device(("device", d), ctx=ctx)
         q = getattr(ctx, "quarantine", None)
         if q is None:
             return None

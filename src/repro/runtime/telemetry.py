@@ -113,6 +113,11 @@ class RuntimeTelemetry:
         # category -> recovery-latency histogram: first fault of a dispatch
         # to its successful (possibly degraded) completion
         self._recovery: dict[str, Histogram] = {}
+        # category -> residency-event counter ("hit" / "miss" / "eviction"
+        # / "invalidation"): the operand-residency ledger — per-category
+        # hit rate is what the router weighs batch depth against
+        self.residency_counts: dict[str, collections.Counter] = \
+            collections.defaultdict(collections.Counter)
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -191,6 +196,26 @@ class RuntimeTelemetry:
         fault to the caller having a correct result again."""
         self._recovery.setdefault(category, Histogram()).record(max(dt_s,
                                                                     0.0))
+
+    def note_residency(self, category: str, event: str) -> None:
+        """Count one residency-cache event ("hit" / "miss" / "eviction" /
+        "invalidation") against ``category`` (mirrored here by the
+        ``ResidencyCache`` whenever a context with telemetry is attached)."""
+        self.residency_counts[category][event] += 1
+
+    def residency_hit_rate(self, category: str | None = None,
+                           ) -> float | None:
+        """hits / (hits + misses) for ``category`` (overall when None);
+        ``None`` before any residency lookup — no traffic is no claim,
+        and the router treats it as rate 0."""
+        hits = misses = 0
+        for cat, c in self.residency_counts.items():
+            if category is not None and cat != category:
+                continue
+            hits += c.get("hit", 0)
+            misses += c.get("miss", 0)
+        total = hits + misses
+        return None if total == 0 else hits / total
 
     def faults_total(self, category: str | None = None) -> int:
         """Total fault events observed (for ``category``, or overall)."""
@@ -435,6 +460,8 @@ class RuntimeTelemetry:
                 self._recovery[cat].merge(h)
             else:
                 self._recovery[cat] = h.copy()
+        for cat, counts in other.residency_counts.items():
+            self.residency_counts[cat].update(counts)
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
@@ -445,6 +472,7 @@ class RuntimeTelemetry:
         self._latency.clear()
         self.fault_counts.clear()
         self._recovery.clear()
+        self.residency_counts.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0
@@ -481,6 +509,13 @@ class RuntimeTelemetry:
             if rec is not None:
                 row += (f" | recovery p50={rec['p50_s']:.3g}s "
                         f"p95={rec['p95_s']:.3g}s (n={rec['n']})")
+            rows.append(row)
+        for cat, counts in sorted(self.residency_counts.items()):
+            parts = [f"{k} x{c}" for k, c in sorted(counts.items())]
+            row = f"  residency[{cat}]: " + "; ".join(parts)
+            rate = self.residency_hit_rate(cat)
+            if rate is not None:
+                row += f" | hit rate {rate:.0%}"
             rows.append(row)
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "

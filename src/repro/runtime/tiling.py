@@ -218,6 +218,20 @@ class MemoryBudget:
                               * _INTERMEDIATE_FACTOR)
         return self.frames_within(max(1, bytes_per_frame), pipeline_depth)
 
+    def minus(self, resident_bytes: int) -> "MemoryBudget":
+        """The budget left for staging after ``resident_bytes`` of the
+        spendable pool are pinned elsewhere (the operand residency cache:
+        resident stacks are live allocations in the same physical pool the
+        tiles stage through, so a fuller cache must mean a shallower
+        tile).  An unlimited budget stays unlimited; otherwise the limit
+        shrinks by the pinned bytes' pre-reserve share, floored at 1 byte —
+        never at 0, which would read as *unlimited* and hand a saturated
+        cache an infinite staging budget."""
+        if self.is_unlimited or resident_bytes <= 0:
+            return self
+        limit = max(1, self.bytes_limit - int(resident_bytes / self.reserve))
+        return dataclasses.replace(self, bytes_limit=limit)
+
     def tile_for_group(self, n_in: int, n_out: int | None, k: int, *,
                        pipeline_depth: int = 2,
                        dtype_bytes: int = BYTES_F32) -> int:

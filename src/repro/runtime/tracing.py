@@ -20,9 +20,13 @@ the ``sched`` and per-device lanes: ``fault`` instants (kind = error /
 straggle / drift / device_loss), ``retry`` spans covering each backoff
 window, ``fallback`` instants marking graceful degradation to the host
 backend, and ``quarantine`` spans covering a device's or category's
-exclusion window.  None of these carry charged time — the reconcile /
-drift contract reads only ``invocation`` trees — so fault observability
-can never unbalance the wall accounting.
+exclusion window.  The operand residency cache
+(``repro.runtime.residency``) emits ``cache`` instants on the host lane
+(kind = hit / miss / eviction / invalidation, with the operand category
+and byte count), so every boundary crossing the cache *avoided* is as
+visible as the ones that were paid.  None of these carry charged time —
+the reconcile / drift contract reads only ``invocation`` trees — so
+fault and cache observability can never unbalance the wall accounting.
 
 Design constraints (all load-bearing):
 

@@ -850,3 +850,79 @@ def test_serving_engine_rejects_aux_without_runtime():
     engine = ServingEngine(cfg, params, batch_slots=1, max_len=16)
     with pytest.raises(RuntimeError):
         engine.submit_aux("fft", jnp.ones((8, 8)))
+
+
+def test_warm_restores_runtime_context_n_devices():
+    """warm() writes the category's device fan-out into the shared context
+    for shard-shape priming; like the tracer and watchdog it suppresses,
+    it must put the context back exactly as it found it."""
+    ex = OffloadExecutor(LANED_4F, max_batch=4, n_devices=1)
+    ex.set_n_devices("fft", 3)
+    before = ex.ctx.n_devices
+    ex.warm("fft", _imgs(1)[0])
+    assert ex.ctx.n_devices == before
+
+
+def test_telemetry_merge_reset_cover_every_field():
+    """Field-by-field round-trip: merging a populated telemetry into a
+    fresh one must reproduce EVERY attribute, and reset() must return to
+    the pristine state.  The explicit name list is the tripwire — adding
+    a field to RuntimeTelemetry without teaching merge()/reset() (and
+    this list) about it fails here, not silently in production."""
+    import collections
+
+    expected = sorted([
+        "stats", "device_stats", "_submits", "_latency", "fault_counts",
+        "_recovery", "residency_counts", "_t0", "_window_s", "_in_window_s",
+    ])
+    tel = RuntimeTelemetry()
+    assert sorted(vars(tel)) == expected, (
+        "RuntimeTelemetry grew a field this test (and likely merge/reset) "
+        "does not cover")
+
+    # populate every field through the public API
+    tel.start()
+    tel.note_submit("fft", t=0.0)
+    tel.note_submit("fft", t=0.5)
+    tel.record("fft", "optical-sim", calls=2, samples_in=8192,
+               samples_out=8192, wall_s=0.5,
+               modeled=LANED_4F.batched_step_cost(4096, batch=2),
+               per_device=[(4096, 4096), (4096, 4096)],
+               bytes_in=32768, bytes_out=32768)
+    tel.record("conv", "host", calls=1, samples_in=4096, samples_out=4096,
+               wall_s=0.1)
+    tel.note_fault("fft", "error")
+    tel.note_fault("fft", "straggle")
+    tel.note_recovery("fft", 0.25)
+    tel.note_residency("fft", "hit")
+    tel.note_residency("fft", "miss")
+    tel.note_residency("conv", "eviction")
+    tel.stop()
+
+    def norm(v):
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            return {f.name: norm(getattr(v, f.name))
+                    for f in dataclasses.fields(v)}
+        if isinstance(v, dict):
+            return {k: norm(x) for k, x in sorted(v.items(), key=repr)}
+        if isinstance(v, (collections.deque, list, tuple)):
+            return [norm(x) for x in v]
+        if hasattr(v, "__dict__") and not isinstance(v, (int, float, str)):
+            return norm(vars(v))
+        return v
+
+    def snapshot(t):
+        return {name: norm(val) for name, val in vars(t).items()}
+
+    merged = RuntimeTelemetry()
+    merged.merge(tel)
+    assert snapshot(merged) == snapshot(tel)
+
+    # and a second merge doubles the additive fields (spot-check)
+    merged.merge(tel)
+    assert merged.stats[("fft", "optical-sim")].calls == 4
+    assert merged.fault_counts["fft"]["error"] == 2
+    assert merged.residency_counts["fft"]["hit"] == 2
+
+    tel.reset()
+    assert snapshot(tel) == snapshot(RuntimeTelemetry())

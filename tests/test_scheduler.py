@@ -585,3 +585,29 @@ def test_scheduler_held_fidelity_shadowing_still_scores():
     (h, *_rest) = sched.poll()
     assert h.fidelity is not None and h.fidelity.batch == 3
     assert ex.in_flight == 0          # shadow batches retire synchronously
+
+
+def test_run_and_get_force_release_held_groups_under_manual_clock():
+    """The blocking path with a scheduler attached: ``OffloadResult.get``
+    (and ``OffloadExecutor.run``, which is submit + get) must force-release
+    a held group rather than block on a deadline the ManualClock will
+    never reach on its own."""
+    # result.get() on a submission held in a partially filled group
+    clk, ex, sched = _sched(max_batch=4)
+    h = sched.submit("fft", _imgs(1, (8, 8))[0])
+    clk.advance(0.01)                 # deadline (0.1s) nowhere near due
+    assert sched.held == 1
+    v = h.get()                       # returns promptly: flush force-releases
+    assert h.done() and sched.held == 0
+    ref = OffloadExecutor(SPEC, max_batch=1).run("fft", _imgs(1, (8, 8))[0])
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(ref))
+    # executor.run() while another submission sits held: the eager call's
+    # flush sweeps the held group along with it
+    clk, ex, sched = _sched(max_batch=4)
+    held = sched.submit("fft", _imgs(1, (8, 8))[0])
+    out = ex.run("fft", _imgs(1, (8, 8), seed=1)[0])
+    assert held.done() and sched.held == 0 and ex.pending == 0
+    np.testing.assert_array_equal(np.asarray(held.value), np.asarray(ref))
+    ref1 = OffloadExecutor(SPEC, max_batch=1).run(
+        "fft", _imgs(1, (8, 8), seed=1)[0])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref1))
