@@ -73,6 +73,7 @@ Run:  PYTHONPATH=src python -m benchmarks.runtime_bench
 
 from __future__ import annotations
 
+import dataclasses
 import datetime
 import json
 import time
@@ -82,6 +83,7 @@ import numpy as np
 
 from repro.runtime import (
     BATCHED_4F,
+    CONV_CAPTURES,
     FidelityChecker,
     ManualClock,
     MemoryBudget,
@@ -220,6 +222,13 @@ def pipeline_comparison(shape: tuple[int, int] = (256, 256),
     }
 
 
+def _scatter_stage_s(tracer: Tracer, calls: int) -> float:
+    """Per-call sum of scatter-staging span time across all devices — the
+    host-side re-``device_put`` cost the resident placement eliminates."""
+    return (sum(s.duration_s for s in tracer.find("scatter_stage"))
+            / max(calls, 1))
+
+
 def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
                        device_counts=(1, 2, 4)) -> list[dict]:
     """Group-sharded flush across n simulated accelerators vs one.
@@ -230,8 +239,27 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
     wall column is honest about the hardware underneath (sequential
     fallback on one device, genuinely scattered when ``jax.devices()`` has
     enough).
+
+    Two columns attack the re-scatter tax the 0.71x investigation blamed
+    (every flush re-``device_put``-ing every shard through the host):
+
+      resident    the same group flushed through a committed device-
+                  resident placement (``residency=True``): after the
+                  priming flush the shards live on their devices, repeat
+                  flushes skip the scatter staging entirely and gather
+                  only at readout.  ``scatter_stage_s`` / ``resident_
+                  scatter_stage_s`` attribute the eliminated staging
+                  per row from traced scatter spans.
+      per_engine  a mixed fft+conv stream dispatched under per-engine
+                  pipeline windows vs the old single shared window
+                  (``shared_window=True``), with the ``engines=``
+                  composed modeled price alongside the measured walls.
     """
     imgs = _images(calls, shape)
+    h_, w_ = shape
+    conv_kernel = (jax.numpy.zeros(shape)
+                   .at[0, 0].set(0.5).at[1, 2].set(0.25)
+                   .at[h_ - 1, 1].set(0.15))
     rows = []
     base_wall = base_modeled = None
     for n in device_counts:
@@ -258,6 +286,56 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
         ex.flush()
         ex.tracer = ex.ctx.tracer = None
         rep = drift_report(tracer.spans())
+        scatter_s = _scatter_stage_s(tracer, calls)
+
+        # resident column: same group, committed placement — the priming
+        # flush pays the scatter once, the timed reps flush against
+        # device-resident shards
+        ex_r = OffloadExecutor(BATCHED_4F, max_batch=calls, n_devices=n,
+                               default_backend="sharded", residency=True)
+        ex_r.warm("fft", imgs[0], batch=calls)
+        for im in imgs:                       # priming flush
+            ex_r.submit("fft", im)
+        ex_r.flush()
+        resident_wall = _timed_flush(ex_r, imgs)
+        r_tracer = Tracer()
+        ex_r.tracer = ex_r.ctx.tracer = r_tracer
+        for im in imgs:
+            ex_r.submit("fft", im)
+        ex_r.flush()
+        ex_r.tracer = ex_r.ctx.tracer = None
+        resident_scatter_s = _scatter_stage_s(r_tracer, calls)
+
+        # per_engine column: fft and conv streams in one flush — each
+        # engine rides its own pipeline window vs the old shared gate
+        mb = max(2, calls // 4)
+        pe_walls = {}
+        for shared in (False, True):
+            ex_m = OffloadExecutor(BATCHED_4F, max_batch=mb, n_devices=n,
+                                   default_backend="sharded",
+                                   shared_window=shared)
+            ex_m.warm("fft", imgs[0], batch=mb)
+            ex_m.warm("conv", imgs[0], kernel=conv_kernel, batch=mb)
+            best = float("inf")
+            for _ in range(3):
+                hs = []
+                for im in imgs:
+                    hs.append(ex_m.submit("fft", im))
+                    hs.append(ex_m.submit("conv", im, kernel=conv_kernel))
+                t0 = time.perf_counter()
+                ex_m.flush()
+                best = min(best, (time.perf_counter() - t0) / len(hs))
+            pe_walls[shared] = best
+        # engines= composed modeled price for one fft+conv window pair
+        n_in = shape[0] * shape[1]
+        spec4 = dataclasses.replace(BATCHED_4F,
+                                    phase_shift_captures=CONV_CAPTURES)
+        composed = BATCHED_4F.batched_step_cost(n_in, engines={
+            "fft": BATCHED_4F.batched_step_cost(
+                n_in, batch=mb, pipeline_depth=2, n_devices=n),
+            "conv": spec4.batched_step_cost(
+                n_in, batch=mb, pipeline_depth=2, n_devices=n),
+        })
         rows.append({
             "n_devices": n,
             "wall_s_per_call": wall,
@@ -265,6 +343,17 @@ def sharded_comparison(shape: tuple[int, int] = SHAPE, calls: int = CALLS,
             "boundary_s_per_call": boundary,
             "wall_speedup": base_wall / max(wall, 1e-12),
             "modeled_speedup": base_modeled / max(modeled, 1e-12),
+            "scatter_stage_s": scatter_s,
+            "resident_wall_s_per_call": resident_wall,
+            "resident_wall_speedup": base_wall / max(resident_wall, 1e-12),
+            "resident_vs_rescatter": wall / max(resident_wall, 1e-12),
+            "resident_scatter_stage_s": resident_scatter_s,
+            "resident_hit_rate": ex_r.telemetry.residency_hit_rate("fft"),
+            "per_engine_wall_s_per_call": pe_walls[False],
+            "shared_window_wall_s_per_call": pe_walls[True],
+            "per_engine_speedup": pe_walls[True] / max(pe_walls[False],
+                                                       1e-12),
+            "per_engine_modeled_s_per_call": composed.total_s / (2 * mb),
             "devices_present": len(jax.devices()),
             "devices_used": ex.telemetry.devices_observed("fft"),
             "trace": rep.to_json(),
@@ -801,6 +890,13 @@ def run(payload: dict | None = None) -> list[str]:
             f"{1e6 * r['wall_s_per_call']:.1f},"
             f"modeled_speedup={r['modeled_speedup']:.3f}x"
             f"|wall_speedup={r['wall_speedup']:.2f}x"
+            f"|resident_wall_speedup={r['resident_wall_speedup']:.2f}x"
+            f"|resident={1e6 * r['resident_wall_s_per_call']:.1f}us"
+            f"|scatter_stage={1e6 * r['scatter_stage_s']:.1f}us"
+            f"->{1e6 * r['resident_scatter_stage_s']:.1f}us"
+            f"|per_engine={1e6 * r['per_engine_wall_s_per_call']:.1f}us"
+            f"vs{1e6 * r['shared_window_wall_s_per_call']:.1f}us"
+            f"shared({r['per_engine_speedup']:.2f}x)"
             f"|boundary={1e6 * r['boundary_s_per_call']:.1f}us"
             f"|devices_used={r['devices_used']}"
             f"/{r['devices_present']}present")

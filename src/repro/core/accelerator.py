@@ -110,6 +110,58 @@ class StepCost:
                         self.hold_s + other.hold_s)
 
 
+def _compose_sides(sides: dict, *, host_s: float = 0.0,
+                   hold_s: float = 0.0) -> StepCost:
+    """Collapse per-engine side tuples ``(dac_s, adc_s, intf_in, intf_out,
+    analog_s, serial_s, stages)`` into one pipelined :class:`StepCost`.
+
+    The executor's per-engine windows share one host staging/DAC write
+    path but each engine owns its analog core and readout, so the composed
+    wall is ``max(sum of write sides, slowest engine's read side)``: the
+    binding side is kept whole and every hidden side is charged only its
+    exposed ``1/total_stages`` prologue share — the same convention the
+    single-engine ``pipeline_depth`` collapse uses, applied across
+    engines.  Serial components (handshakes whose split is unknown, sync
+    barriers) never overlap.
+    """
+    writes = {n: s[0] + s[2] for n, s in sides.items()}
+    reads = {n: s[1] + s[3] + s[4] for n, s in sides.items()}
+    serial = sum(s[5] for s in sides.values())
+    total_stages = sum(s[6] for s in sides.values())
+    w_total = sum(writes.values())
+    r_name = max(reads, key=lambda n: reads[n])
+    r_max = reads[r_name]
+    dac_s = adc_s = intf_in = intf_out = analog_s = 0.0
+    hidden = 1.0 / total_stages if total_stages > 1 else 1.0
+    for name, (d, a, i1, i2, an, _sy, _st) in sides.items():
+        if total_stages > 1:
+            if w_total >= r_max:
+                # the shared host write path binds: every engine's
+                # analog+read side hides behind it
+                a *= hidden
+                i2 *= hidden
+                an *= hidden
+            elif name == r_name:
+                # the slowest engine's read side binds: its own write
+                # prologue is the only exposed write share
+                d *= hidden
+                i1 *= hidden
+            else:
+                d *= hidden
+                a *= hidden
+                i1 *= hidden
+                i2 *= hidden
+                an *= hidden
+        dac_s += d
+        adc_s += a
+        intf_in += i1
+        intf_out += i2
+        analog_s += an
+    return StepCost(dac_s=dac_s, adc_s=adc_s,
+                    interface_s=intf_in + intf_out + serial,
+                    analog_s=analog_s, host_s=host_s, hold_s=hold_s)
+
+
 @dataclasses.dataclass(frozen=True)
 class OpticalFourierAcceleratorSpec:
     """A 4f optical Fourier/convolution accelerator (paper Appendix A/B).
@@ -218,6 +270,106 @@ class OpticalFourierAcceleratorSpec:
                     + self.time_of_flight_s())
         return dac_s, adc_s, intf_in, intf_out, analog_s, frames
 
+    def _group_sides(self, n_in: int, n_out: int | None, *, batch: int,
+                     pipeline_depth: int, n_devices: int,
+                     tile_k: int | None, mem_budget,
+                     resident_frames: int, weight_samples: int,
+                     resident_weights: int,
+                     ) -> tuple[float, float, float, float, float, float,
+                                int]:
+        """Unoverlapped totals of one (possibly tiled, sharded, partially
+        resident) invocation: ``(dac_s, adc_s, intf_in, intf_out, analog_s,
+        sync_s, stages)``.  This is the accounting both
+        :meth:`batched_step_cost` (which then applies the intra-invocation
+        pipeline collapse) and the ``engines=`` composition mode (which
+        applies a cross-engine collapse instead) price from — one
+        definition of the physics, two overlap disciplines."""
+        if n_out is None:
+            n_out = n_in
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
+            raise ValueError("residency counts must be >= 0")
+        if tile_k is None and mem_budget is not None:
+            tile_k = mem_budget.tile_for_group(
+                n_in, n_out, batch, pipeline_depth=pipeline_depth)
+        if tile_k is not None and tile_k < 1:
+            raise ValueError("tile_k must be >= 1")
+        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
+        dac_s = adc_s = intf_in = intf_out = analog_s = sync_s = 0.0
+        stages = 0
+        remaining = min(int(resident_frames), batch)
+        for b in sizes:
+            eff = min(n_devices, b)
+            pb = math.ceil(b / eff)
+            res_b = min(remaining, b)
+            remaining -= res_b
+            # the tile's non-resident share crosses the write path, split
+            # per device the same way the frames themselves are
+            wb = pb - min(math.ceil(res_b / eff), pb)
+            d, a, i1, i2, an, fr = self._batched_sides(
+                n_in, n_out, pb, write_batch=wb)
+            dac_s += d
+            adc_s += a
+            intf_in += i1
+            intf_out += i2
+            analog_s += an
+            stages += fr
+            if n_devices > 1:
+                sync_s += eff * self.device_sync_s
+        w_extra = max(0, int(weight_samples) - int(resident_weights))
+        if w_extra:
+            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
+            intf_in += w_extra / self.slm_interface_hz
+        # the stages slot counts OVERLAPPABLE stages: a strictly serial
+        # engine (pipeline_depth 1) exposes every prologue whole, so it
+        # must compose as a single stage — this is what keeps a
+        # degenerate one-engine composition exactly equal to the
+        # pipeline_depth price at every depth
+        if pipeline_depth < 2:
+            stages = 1
+        return dac_s, adc_s, intf_in, intf_out, analog_s, sync_s, stages
+
+    def _compose_engines(self, engines, *, host_s: float = 0.0,
+                         hold_s: float = 0.0) -> StepCost:
+        """Price concurrent per-engine pipeline windows (the executor's
+        DAG mode): each engine's write path (DAC + SLM link) serializes on
+        the shared host staging resource while the analog+read paths run
+        concurrently on their own hardware, so the composed wall is
+        ``max(sum of write sides, slowest engine's read side)`` with the
+        hidden sides charged only their exposed 1/stages prologue share —
+        the same keep-the-binding-side-whole convention the
+        ``pipeline_depth`` mode uses, applied across engines."""
+        if not engines:
+            raise ValueError("engines must name at least one engine")
+        sides: dict = {}
+        for name, e in engines.items():
+            if isinstance(e, StepCost):
+                # pre-priced engine: write = DAC, read = ADC + analog, the
+                # interface split is unknown so it stays serial
+                sides[name] = (e.dac_s, e.adc_s, 0.0, 0.0, e.analog_s,
+                               e.interface_s, 1)
+                continue
+            kw = dict(e)
+            sides[name] = self._group_sides(
+                kw.pop("n_in"), kw.pop("n_out", None),
+                batch=kw.pop("batch", 1),
+                pipeline_depth=kw.pop("pipeline_depth", 1),
+                n_devices=kw.pop("n_devices", 1),
+                tile_k=kw.pop("tile_k", None),
+                mem_budget=kw.pop("mem_budget", None),
+                resident_frames=kw.pop("resident_frames", 0),
+                weight_samples=kw.pop("weight_samples", 0),
+                resident_weights=kw.pop("resident_weights", 0))
+            if kw:
+                raise ValueError(f"unknown engine kwargs for {name!r}: "
+                                 f"{sorted(kw)}")
+        return _compose_sides(sides, host_s=host_s, hold_s=hold_s)
+
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
@@ -227,7 +379,8 @@ class OpticalFourierAcceleratorSpec:
                           mem_budget=None,
                           resident_frames: int = 0,
                           weight_samples: int = 0,
-                          resident_weights: int = 0) -> StepCost:
+                          resident_weights: int = 0,
+                          engines=None) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
         ``hold_s`` is the queueing delay a continuous-batching scheduler
@@ -307,48 +460,26 @@ class OpticalFourierAcceleratorSpec:
         subset of those samples already resident — a resident kernel
         writes nothing.  All three default to 0: the historical price,
         bit for bit.
+
+        ``engines`` switches to the *composition* mode pricing the
+        executor's per-engine pipeline windows: a mapping of engine name →
+        either a kwargs dict for this method (``n_in`` required, same
+        levers as above minus ``engines`` itself) or a pre-priced
+        :class:`StepCost`.  All other keyword levers are ignored in this
+        mode except ``host_s``/``hold_s`` — see :meth:`_compose_engines`
+        for the overlap discipline.
         """
-        if n_out is None:
-            n_out = n_in
-        if batch < 1:
-            raise ValueError("batch must be >= 1")
-        if pipeline_depth < 1:
-            raise ValueError("pipeline_depth must be >= 1")
-        if n_devices < 1:
-            raise ValueError("n_devices must be >= 1")
-        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
-            raise ValueError("residency counts must be >= 0")
-        if tile_k is None and mem_budget is not None:
-            tile_k = mem_budget.tile_for_group(
-                n_in, n_out, batch, pipeline_depth=pipeline_depth)
-        if tile_k is not None and tile_k < 1:
-            raise ValueError("tile_k must be >= 1")
-        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
-        dac_s = adc_s = intf_in = intf_out = analog_s = sync_s = 0.0
-        stages = 0
-        remaining = min(int(resident_frames), batch)
-        for b in sizes:
-            eff = min(n_devices, b)
-            pb = math.ceil(b / eff)
-            res_b = min(remaining, b)
-            remaining -= res_b
-            # the tile's non-resident share crosses the write path, split
-            # per device the same way the frames themselves are
-            wb = pb - min(math.ceil(res_b / eff), pb)
-            d, a, i1, i2, an, fr = self._batched_sides(
-                n_in, n_out, pb, write_batch=wb)
-            dac_s += d
-            adc_s += a
-            intf_in += i1
-            intf_out += i2
-            analog_s += an
-            stages += fr
-            if n_devices > 1:
-                sync_s += eff * self.device_sync_s
-        w_extra = max(0, int(weight_samples) - int(resident_weights))
-        if w_extra:
-            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
-            intf_in += w_extra / self.slm_interface_hz
+        if engines is not None:
+            return self._compose_engines(engines, host_s=host_s,
+                                         hold_s=hold_s)
+        dac_s, adc_s, intf_in, intf_out, analog_s, sync_s, stages = (
+            self._group_sides(n_in, n_out, batch=batch,
+                              pipeline_depth=pipeline_depth,
+                              n_devices=n_devices, tile_k=tile_k,
+                              mem_budget=mem_budget,
+                              resident_frames=resident_frames,
+                              weight_samples=weight_samples,
+                              resident_weights=resident_weights))
         if pipeline_depth >= 2 and stages > 1:
             write_side = dac_s + intf_in
             read_side = adc_s + intf_out + analog_s
@@ -402,6 +533,90 @@ class OpticalMVMAcceleratorSpec:
                         interface_s=self.interface_latency_s,
                         analog_s=self.optical_pass_s, host_s=host_s)
 
+    def _group_sides(self, n_in: int, n_out: int | None, *, batch: int,
+                     pipeline_depth: int, n_devices: int,
+                     tile_k: int | None, mem_budget,
+                     resident_frames: int, weight_samples: int,
+                     resident_weights: int,
+                     ) -> tuple[float, float, float, float, float, float,
+                                int]:
+        """Unoverlapped totals of one invocation in the shared side layout
+        ``(dac_s, adc_s, intf_in, intf_out, analog_s, serial_s, stages)``.
+        The MVM handshake has no known write/read split, so it rides the
+        serial slot (with the sync barriers) and the in/out interface
+        slots stay zero."""
+        if n_out is None:
+            n_out = n_in
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
+        if n_devices < 1:
+            raise ValueError("n_devices must be >= 1")
+        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
+            raise ValueError("residency counts must be >= 0")
+        if tile_k is None and mem_budget is not None:
+            tile_k = mem_budget.tile_for_group(
+                n_in, n_out, batch, pipeline_depth=pipeline_depth)
+        if tile_k is not None and tile_k < 1:
+            raise ValueError("tile_k must be >= 1")
+        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
+        dac_s = adc_s = analog_s = intf_s = 0.0
+        stages = 0
+        remaining = min(int(resident_frames), batch)
+        for b in sizes:
+            eff = min(n_devices, b)
+            pb = math.ceil(b / eff)
+            res_b = min(remaining, b)
+            remaining -= res_b
+            wb = pb - min(math.ceil(res_b / eff), pb)
+            if wb:
+                dac_s += self.dac.time_for(wb * n_in, self.dac_lanes)
+            adc_s += self.adc.time_for(pb * n_out, self.adc_lanes)
+            analog_s += pb * self.optical_pass_s
+            intf_s += self.interface_latency_s
+            stages += pb
+            if n_devices > 1:
+                intf_s += eff * self.device_sync_s
+        w_extra = max(0, int(weight_samples) - int(resident_weights))
+        if w_extra:
+            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
+        # overlappable stages only: a serial engine composes as one stage
+        # (same rule as the 4f family — keeps degenerate one-engine
+        # composition exactly equal to the pipeline_depth price)
+        if pipeline_depth < 2:
+            stages = 1
+        return dac_s, adc_s, 0.0, 0.0, analog_s, intf_s, stages
+
+    def _compose_engines(self, engines, *, host_s: float = 0.0,
+                         hold_s: float = 0.0) -> StepCost:
+        """Price concurrent per-engine pipeline windows — see
+        :meth:`OpticalFourierAcceleratorSpec._compose_engines`; the
+        composition discipline (:func:`_compose_sides`) is shared."""
+        if not engines:
+            raise ValueError("engines must name at least one engine")
+        sides: dict = {}
+        for name, e in engines.items():
+            if isinstance(e, StepCost):
+                sides[name] = (e.dac_s, e.adc_s, 0.0, 0.0, e.analog_s,
+                               e.interface_s, 1)
+                continue
+            kw = dict(e)
+            sides[name] = self._group_sides(
+                kw.pop("n_in"), kw.pop("n_out", None),
+                batch=kw.pop("batch", 1),
+                pipeline_depth=kw.pop("pipeline_depth", 1),
+                n_devices=kw.pop("n_devices", 1),
+                tile_k=kw.pop("tile_k", None),
+                mem_budget=kw.pop("mem_budget", None),
+                resident_frames=kw.pop("resident_frames", 0),
+                weight_samples=kw.pop("weight_samples", 0),
+                resident_weights=kw.pop("resident_weights", 0))
+            if kw:
+                raise ValueError(f"unknown engine kwargs for {name!r}: "
+                                 f"{sorted(kw)}")
+        return _compose_sides(sides, host_s=host_s, hold_s=hold_s)
+
     def batched_step_cost(self, n_in: int, n_out: int | None = None, *,
                           batch: int = 1, host_s: float = 0.0,
                           pipeline_depth: int = 1,
@@ -411,7 +626,8 @@ class OpticalMVMAcceleratorSpec:
                           mem_budget=None,
                           resident_frames: int = 0,
                           weight_samples: int = 0,
-                          resident_weights: int = 0) -> StepCost:
+                          resident_weights: int = 0,
+                          engines=None) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
 
         ``hold_s`` charges continuous-batching queueing delay to the
@@ -449,43 +665,21 @@ class OpticalMVMAcceleratorSpec:
         weights as held in the optical domain — residency is the mechanism
         that keeps that assumption honest).  Defaults of 0 reproduce the
         historical price bit for bit.
+
+        ``engines`` switches to the cross-engine composition mode, exactly
+        as on the 4f family.
         """
-        if n_out is None:
-            n_out = n_in
-        if batch < 1:
-            raise ValueError("batch must be >= 1")
-        if pipeline_depth < 1:
-            raise ValueError("pipeline_depth must be >= 1")
-        if n_devices < 1:
-            raise ValueError("n_devices must be >= 1")
-        if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
-            raise ValueError("residency counts must be >= 0")
-        if tile_k is None and mem_budget is not None:
-            tile_k = mem_budget.tile_for_group(
-                n_in, n_out, batch, pipeline_depth=pipeline_depth)
-        if tile_k is not None and tile_k < 1:
-            raise ValueError("tile_k must be >= 1")
-        sizes = tile_sizes(batch, batch if tile_k is None else tile_k)
-        dac_s = adc_s = analog_s = intf_s = 0.0
-        stages = 0
-        remaining = min(int(resident_frames), batch)
-        for b in sizes:
-            eff = min(n_devices, b)
-            pb = math.ceil(b / eff)
-            res_b = min(remaining, b)
-            remaining -= res_b
-            wb = pb - min(math.ceil(res_b / eff), pb)
-            if wb:
-                dac_s += self.dac.time_for(wb * n_in, self.dac_lanes)
-            adc_s += self.adc.time_for(pb * n_out, self.adc_lanes)
-            analog_s += pb * self.optical_pass_s
-            intf_s += self.interface_latency_s
-            stages += pb
-            if n_devices > 1:
-                intf_s += eff * self.device_sync_s
-        w_extra = max(0, int(weight_samples) - int(resident_weights))
-        if w_extra:
-            dac_s += self.dac.time_for(w_extra, self.dac_lanes)
+        if engines is not None:
+            return self._compose_engines(engines, host_s=host_s,
+                                         hold_s=hold_s)
+        dac_s, adc_s, _i1, _i2, analog_s, intf_s, stages = (
+            self._group_sides(n_in, n_out, batch=batch,
+                              pipeline_depth=pipeline_depth,
+                              n_devices=n_devices, tile_k=tile_k,
+                              mem_budget=mem_budget,
+                              resident_frames=resident_frames,
+                              weight_samples=weight_samples,
+                              resident_weights=resident_weights))
         if pipeline_depth >= 2 and stages > 1:
             hidden = 1.0 / stages
             if dac_s <= adc_s + analog_s:

@@ -16,7 +16,13 @@ that runs it.  Module map:
                residue, AND the dispatch/launch overhead itself: the
                paper's §6 batching lever, executed rather than modeled),
                pipelined two deep (``flush_async``: invocation k+1 stages
-               while invocation k computes; per-result ``wait``/``done``),
+               while invocation k computes; per-result ``wait``/``done``)
+               behind per-``(category, backend)`` pipeline *windows*
+               (``set_pipeline_window``): one engine's in-flight depth
+               never gates another's, retirement stays submit-ordered
+               within each engine, and the global ``pipeline_depth``
+               remains the back-compat default for unpinned categories
+               (``shared_window=True`` restores the old single gate),
                with per-category coalescing ceilings (``set_max_batch``),
                per-shape DFT-factor / Fourier-mask / jit caches, a public
                group-release primitive (``release``) the scheduler drives,
@@ -50,7 +56,13 @@ that runs it.  Module map:
                = max-over-devices + sync) or frame sharding (one large
                frame tiles onto multiple apertures with overlap-save halos
                for conv) — with mesh-aware device placement and an
-               off-mesh sequential fallback (CPU tests).
+               off-mesh sequential fallback (CPU tests).  With residency
+               on, the backend commits one device-resident *placement*
+               per ``(category, group shape)``: shards are
+               ``device_put`` once and stay resident across tiles and
+               flushes, only changed frames re-cross the DAC, gather
+               happens only at ADC readout, and quarantine/device loss
+               drops the placement and rebuilds it on the survivors.
   tiling     — ``MemoryBudget`` / ``choose_tile`` / ``choose_blocks``:
                memory-budgeted tiled dispatch.  A released flush group
                whose monolithic ``(K, H, W)`` stack would overflow the
@@ -79,7 +91,9 @@ that runs it.  Module map:
                — adaptively: each category's ``max_batch``, sharded
                ``n_devices`` AND memory-budgeted ``tile_k`` are picked
                from observed telemetry (occupancy, per-call boundary
-               traffic) under an optional latency ``deadline_s``.
+               traffic) under an optional latency ``deadline_s``, and
+               each category's pipeline window collapses to its observed
+               in-flight occupancy (``choose_windows``).
   faults     — the fault story for the conversion boundary:
                ``ChaosBackend`` wraps any registered backend with a
                deterministic seeded ``FaultSchedule`` (transient dispatch
@@ -169,7 +183,12 @@ from repro.runtime.router import PlanRouter
 from repro.runtime.scheduler import ManualClock, OffloadScheduler
 from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_sizes
 from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
-from repro.runtime.telemetry import BackendStats, DeviceStats, RuntimeTelemetry
+from repro.runtime.telemetry import (
+    BackendStats,
+    DeviceStats,
+    RuntimeTelemetry,
+    WindowStats,
+)
 from repro.runtime.tiling import (
     BlockPlan,
     MemoryBudget,
@@ -228,6 +247,7 @@ __all__ = [
     "BackendStats",
     "DeviceStats",
     "RuntimeTelemetry",
+    "WindowStats",
     "BlockPlan",
     "MemoryBudget",
     "TilePlan",

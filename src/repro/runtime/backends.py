@@ -105,11 +105,16 @@ class BackendContext:
     itself, keyed on the same shapes *and* block sizes (the block sizes
     are jit-static), so a replanned layout always compiles fresh.
 
-    ``pipeline_depth`` is how deep the owning executor double-buffers
-    boundary crossings; analog backends thread it into
+    ``pipeline_depth`` is how deep the owning executor overlaps boundary
+    crossings for *this* invocation; analog backends thread it into
     ``batched_step_cost`` so the modeled price matches how the invocation
     is actually overlapped (2 = the executor's async double-buffered
-    flush; 1 = strictly serial crossings).
+    flush; 1 = strictly serial crossings).  The executor writes it
+    per-dispatch (and ``warm()`` mirrors the same write) from the
+    dispatched category's per-engine pipeline window
+    (``set_pipeline_window``), falling back to the global
+    ``pipeline_depth`` for unpinned categories — so a backend never needs
+    to know which window it ran under, only the depth it was given.
 
     ``n_devices`` is how many replicated simulated accelerators the sharded
     backend scatters one invocation across (the executor writes the

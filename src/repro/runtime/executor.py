@@ -188,6 +188,7 @@ class _Inflight:
     hold_s: float = 0.0   # scheduler hold time priced into this invocation
     span: Span | None = None      # open invocation span (tracing on)
     t_stage_end: float = 0.0      # tracer-clock time staging finished
+    wkey: tuple = ()              # (category, requested backend) window key
 
 
 class OffloadExecutor:
@@ -206,9 +207,22 @@ class OffloadExecutor:
         A global ceiling; per-category ceilings (``set_max_batch``) let the
         router adapt coalescing depth per category without touching it.
       pipeline_depth: how many batched invocations may be in flight at
-        once.  2 (default) double-buffers the boundary: group k+1 stages
-        while group k computes.  1 restores strictly serial
-        dispatch-then-block crossings.
+        once *per engine* — each ``(category, backend)`` pair owns its own
+        in-flight window of this depth, so an fft group on the optical
+        engine, a conv group on another, and a host-fallback group all
+        overlap instead of serializing behind one shared deque (the
+        pipeline is a small DAG; retirement stays submit-order *within*
+        each engine).  2 (default) double-buffers each engine's boundary:
+        group k+1 stages while group k computes.  1 restores strictly
+        serial dispatch-then-block crossings per engine.  Per-category
+        depths (``set_pipeline_window``) let the router adapt window depth
+        per engine; the global value is the default/back-compat alias
+        every unpinned category inherits.
+      shared_window: ``True`` restores the pre-per-engine discipline — ONE
+        global ``pipeline_depth``-deep window shared by every engine, so
+        dispatching any invocation retires the globally oldest one
+        regardless of engine.  The measured baseline per-engine windows
+        are benched against.
       n_devices: how many replicated simulated accelerators the ``sharded``
         backend scatters each invocation across.  A global ceiling;
         per-category counts (``set_n_devices``) let the router adapt the
@@ -281,6 +295,7 @@ class OffloadExecutor:
                  shard_mode: str = "auto",
                  mem_budget: MemoryBudget | None = None,
                  tile_k: int | None = None,
+                 shared_window: bool = False,
                  clock: Callable[[], float] = time.perf_counter,
                  retry: RetryPolicy | None = None,
                  residency: "ResidencyCache | bool | None" = None,
@@ -330,9 +345,11 @@ class OffloadExecutor:
         self.n_devices = n_devices
         self.mem_budget = mem_budget
         self.tile_k = tile_k
+        self.shared_window = shared_window
         self._category_max_batch: dict[str, int] = {}
         self._category_n_devices: dict[str, int] = {}
         self._category_tile_k: dict[str, int] = {}
+        self._category_window: dict[str, int] = {}
         self._clock = clock
         self._queue: list[_Pending] = []
         self._inflight: collections.deque[_Inflight] = collections.deque()
@@ -392,6 +409,27 @@ class OffloadExecutor:
     def category_n_devices(self) -> Mapping[str, int]:
         return dict(self._category_n_devices)
 
+    # -- per-engine pipeline windows -------------------------------------------
+    def pipeline_window_for(self, category: str) -> int:
+        """Effective in-flight window depth for ``category``'s engine.  The
+        global ``pipeline_depth`` is the default every unpinned category
+        inherits — the back-compat alias: with no pins and
+        ``shared_window=False`` a single-category workload behaves exactly
+        like the historical global window."""
+        return max(1, self._category_window.get(category,
+                                                self.pipeline_depth))
+
+    def set_pipeline_window(self, category: str, depth: int) -> None:
+        """Set a per-category in-flight window depth (the adaptive hook
+        ``PlanRouter.replan`` drives alongside ``set_max_batch`` /
+        ``set_n_devices`` / ``set_tile_k``)."""
+        if depth < 1:
+            raise ValueError("pipeline window depth must be >= 1")
+        self._category_window[category] = depth
+
+    def category_windows(self) -> Mapping[str, int]:
+        return dict(self._category_window)
+
     # -- per-category tile depth (memory-budgeted dispatch) --------------------
     def set_tile_k(self, category: str, t: int) -> None:
         """Pin ``category``'s frames-per-tile (the adaptive hook
@@ -424,7 +462,8 @@ class OffloadExecutor:
             t = choose_tile(int(x.size), depth, self.effective_mem_budget(),
                             n_out=n_out,
                             dtype_bytes=max(1, x.dtype.itemsize),
-                            pipeline_depth=self.pipeline_depth).tile_k
+                            pipeline_depth=self.pipeline_window_for(
+                                category)).tile_k
         return max(1, min(int(t), depth))
 
     def effective_mem_budget(self) -> MemoryBudget:
@@ -575,13 +614,20 @@ class OffloadExecutor:
             batch = self.max_batch_for(category)
         if batch < 1:
             raise ValueError("batch must be >= 1")
-        # the category fan-out is written for shard-shape priming but must
-        # not leak into the shared context after the warm call — a context
-        # consumer between warm and the next dispatch would see one
-        # category's stale device count (dispatch rewrites it, warm must
-        # restore it, same as the tracer/watchdog below)
+        # the category fan-out and per-engine window depth are written for
+        # shard-shape priming but must not leak into the shared context
+        # after the warm call — a context consumer between warm and the
+        # next dispatch would see one category's stale device count or
+        # window depth (dispatch rewrites both, warm must restore them,
+        # same as the tracer/watchdog below).  Writing the window here is
+        # the per-engine edition of the warm-parity rule: the context's
+        # pipeline depth feeds both the tile choice and the backends'
+        # modeled price, so warm must prime the exact depth dispatch will
+        # run this category at.
         saved_nd, self.ctx.n_devices = \
             self.ctx.n_devices, self.n_devices_for(category)
+        saved_pd, self.ctx.pipeline_depth = \
+            self.ctx.pipeline_depth, self.pipeline_window_for(category)
         tile = self.resolve_tile_k(category, x, batch, weights=weights)
         # warm-up runs are not workload: suppress backend-side tracing so
         # priming does not litter the trace with orphan device spans, the
@@ -602,6 +648,7 @@ class OffloadExecutor:
             self.ctx.watchdog = saved_wd
             self.ctx.residency = saved_res
             self.ctx.n_devices = saved_nd
+            self.ctx.pipeline_depth = saved_pd
 
     @property
     def pending(self) -> int:
@@ -715,12 +762,41 @@ class OffloadExecutor:
             self._retire(self._inflight.popleft())
 
     def _retire_containing(self, result: OffloadResult) -> None:
-        """Retire in-flight invocations up to the one holding ``result``
-        (retirement is in dispatch order to keep wall accounting honest)."""
-        while self._inflight and any(p.result is result
-                                     for f in self._inflight
-                                     for p in f.chunk):
-            self._retire(self._inflight.popleft())
+        """Retire in-flight invocations up to the one holding ``result``.
+
+        Retirement is in dispatch order *within the result's engine window*
+        (category, backend) — the per-engine DAG discipline: waiting on an
+        fft result must not block-and-bill an unrelated conv engine's
+        still-computing window.  ``shared_window=True`` restores the
+        historical global dispatch-order drain."""
+        target = next((g for g in self._inflight
+                       if any(p.result is result for p in g.chunk)), None)
+        if target is None:
+            return
+        while self._inflight:
+            if self.shared_window:
+                g = self._inflight.popleft()
+            else:
+                g = next((g for g in self._inflight
+                          if g.wkey == target.wkey), None)
+                if g is None:
+                    return
+                self._inflight.remove(g)
+            self._retire(g)
+            if g is target:
+                return
+
+    def _retire_matching(self, wkey: tuple) -> None:
+        """Retire the oldest in-flight invocation of engine ``wkey`` — the
+        per-engine window gate's eviction: a full fft window retires fft's
+        oldest group, never a conv group that happens to be globally
+        older.  Dispatch order is preserved per engine (the deque is
+        scanned front to back)."""
+        for i, g in enumerate(self._inflight):
+            if g.wkey == wkey:
+                del self._inflight[i]
+                self._retire(g)
+                return
 
     def _dispatch_async(self, chunk: list[_Pending], *,
                         reason: str = "flush",
@@ -743,6 +819,20 @@ class OffloadExecutor:
                                    weights=head.weights)
         start = 0
         sizes = tile_sizes(len(chunk), tile)
+        # Device-resident sharded dispatch: commit ONE sharded placement
+        # for the whole released chunk before tiling, so every tile's
+        # sub-stack routes through the same resident shards instead of
+        # re-scattering per tile (and repeat flushes of unchanged frames
+        # skip the host->device hop entirely).  Duck-typed: only backends
+        # that shard (and only with a residency cache attached) have the
+        # hook; without it dispatch is bit-identical to before.
+        commit = getattr(self._backend(head.backend),
+                         "commit_placement", None)
+        if commit is not None and self.ctx.residency is not None:
+            self.ctx.n_devices = self.n_devices_for(head.category)
+            commit(head.category, [p.x for p in chunk], self.ctx,
+                   kernel=head.kernel, weights=head.weights,
+                   tile_sizes=sizes)
         for t, size in enumerate(sizes):
             self._dispatch_invocation(chunk[start:start + size],
                                       reason=reason, parent=parent,
@@ -872,18 +962,34 @@ class OffloadExecutor:
                              reason: str = "flush",
                              parent: Span | None = None,
                              tile: int = 0, tiles: int = 1) -> None:
-        # Keep at most pipeline_depth invocations in flight: retiring here
-        # is what makes the pipeline two-deep rather than unbounded (frame
-        # buffers are finite), and it blocks on the *oldest* invocation
-        # while this chunk's host-side staging below overlaps it.
-        while len(self._inflight) >= self.pipeline_depth:
-            self._retire(self._inflight.popleft())
+        # Keep at most one *window* of invocations in flight per engine:
+        # retiring here is what makes each engine's pipeline window-deep
+        # rather than unbounded (frame buffers are finite), and it blocks
+        # on that engine's *oldest* invocation while this chunk's host-side
+        # staging below overlaps it.  Engines gate independently — a full
+        # fft window never forces a conv retirement (shared_window=True
+        # restores the historical single global window).
         head = chunk[0]
+        wkey = (head.category, head.backend)
+        if self.shared_window:
+            depth = self.pipeline_depth
+            while len(self._inflight) >= depth:
+                self._retire(self._inflight.popleft())
+        else:
+            depth = self.pipeline_window_for(head.category)
+            while sum(1 for g in self._inflight if g.wkey == wkey) >= depth:
+                self._retire_matching(wkey)
+        occupancy = 1 + sum(1 for g in self._inflight if g.wkey == wkey)
+        self.telemetry.note_window(head.category, head.backend,
+                                   in_flight=occupancy, depth=depth)
         be = self._reroute_quarantined(head.category,
                                        self._backend(head.backend))
         xs = [p.x for p in chunk]
-        # per-category device fan-out, written the same way warm() writes it
+        # per-category device fan-out and window depth, written the same
+        # way warm() writes them (the context's depth feeds the backends'
+        # modeled pipeline collapse)
         self.ctx.n_devices = self.n_devices_for(head.category)
+        self.ctx.pipeline_depth = depth
         # Queueing delay under admission control: age of the oldest
         # coalesced call at dispatch.  Only priced when a scheduler is in
         # charge — eager flushes dispatch at submit granularity and their
@@ -899,7 +1005,9 @@ class OffloadExecutor:
                            category=head.category, backend=head.backend,
                            batch=len(chunk), tile=tile, tiles=tiles,
                            reason=reason,
-                           call_ids=[p.call_id for p in chunk])
+                           call_ids=[p.call_id for p in chunk],
+                           window_depth=depth,
+                           window_occupancy=occupancy)
             if hold_s > 0.0:
                 # retrospective: the hold window ended now, at dispatch
                 t_now = tr.now()
@@ -958,7 +1066,7 @@ class OffloadExecutor:
                              modeled=modeled, t0=t0, dispatch_s=dispatch_s,
                              device_samples=device_samples, shadow=shadow,
                              hold_s=hold_s, span=inv,
-                             t_stage_end=t_stage_end)
+                             t_stage_end=t_stage_end, wkey=wkey)
         if shadow:
             # shadow scoring needs concrete values: validation mode is
             # synchronous by construction (batches the sample_every knob

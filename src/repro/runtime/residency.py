@@ -25,7 +25,10 @@ so a resident operand is near-free on the write path.
     so a re-scatter ships only the shards missing from each device, and a
     quarantined device's resident set is *dropped* — its bytes are not
     trustworthy after the fault that quarantined it, and re-admission
-    must re-stage.
+    must re-stage.  The sharded backend's device-resident placements
+    store per-frame shards under kind ``"frame-shard"`` and frame-mode
+    row tiles under ``"frame-tile"``; dropping a device's set is what
+    invalidates its placement shards.
   * **Budget-priced LRU.**  Capacity is a fraction of the staging
     :class:`~repro.runtime.tiling.MemoryBudget` (residency and tiles
     share the same physical bytes): storing past capacity evicts

@@ -53,6 +53,8 @@ class PlanRouter:
         self._router_set_dev: dict[str, int] = {}
         self._operator_tile_caps: dict[str, int] = {}
         self._router_set_tile: dict[str, int] = {}
+        self._operator_window_caps: dict[str, int] = {}
+        self._router_set_window: dict[str, int] = {}
         # modeled-vs-measured attribution from the executor's tracer,
         # refreshed by each replan (None when tracing is off / no spans)
         self.drift: DriftReport | None = None
@@ -194,6 +196,37 @@ class PlanRouter:
             chosen[cat] = (k, max(1, min(n_cap, k)), tile_for(k))
         return chosen
 
+    def choose_windows(self) -> dict[str, int]:
+        """Pick per-category pipeline *window* depths from measured
+        telemetry.
+
+        A category's window is how many of its invocations the executor
+        lets ride in flight before retirement blocks the next submit
+        (:meth:`~repro.runtime.executor.OffloadExecutor.set_pipeline_window`).
+        The useful depth is what the traffic actually achieved: a category
+        whose invocations never overlapped (mean in-flight-at-dispatch
+        occupancy ~1, from ``telemetry.window_occupancy``) collapses to a
+        window of 1 and the cost model stops crediting it with pipelined
+        hiding; a category that genuinely rode the window deep keeps the
+        executor's full global depth.  The pick is
+        ``min(operator bound, global pipeline_depth, round(measured
+        occupancy))`` (floor 1) — monotone in the observed overlap, and
+        never above the global depth so the back-compat alias stays the
+        ceiling.
+
+        Window depths the *operator* pinned directly
+        (``executor.set_pipeline_window``) are bounds the adaptive choice
+        never exceeds, with the same snapshot-before-overwrite bookkeeping
+        as the batch/device/tile ceilings.
+        """
+        ex, telemetry = self.executor, self.executor.telemetry
+        chosen: dict[str, int] = {}
+        for cat in telemetry.categories():
+            cap = self._operator_window_bound(cat)
+            occ = max(1, round(telemetry.window_occupancy(cat)))
+            chosen[cat] = max(1, min(cap, ex.pipeline_depth, occ))
+        return chosen
+
     def choose_max_batch(self, deadline_s: float | None = None) -> dict[str, int]:
         """The batch slice of :meth:`choose_sharding` (kept for callers
         that predate sharded/tiled offload)."""
@@ -226,6 +259,15 @@ class PlanRouter:
             self._operator_tile_caps[cat] = current
         return self._operator_tile_caps.get(cat)
 
+    def _operator_window_bound(self, cat: str) -> int:
+        """Like :meth:`_operator_bound`, for the per-engine pipeline
+        window depth (the executor's global ``pipeline_depth`` when the
+        operator never pinned one)."""
+        current = self.executor.category_windows().get(cat)
+        if current is not None and current != self._router_set_window.get(cat):
+            self._operator_window_caps[cat] = current
+        return self._operator_window_caps.get(cat, self.executor.pipeline_depth)
+
     # -- the loop-closer -------------------------------------------------------
     def replan(self, spec=None,
                extra_profiles: tuple[CategoryProfile, ...] = (),
@@ -248,7 +290,11 @@ class PlanRouter:
         tile depths to :meth:`choose_sharding`'s ``(max_batch, n_devices,
         tile_k)`` picks (observed traffic + optional ``deadline_s``
         latency bound) as part of ``apply`` — the caps stop being fixed
-        constructor arguments and follow the workload.
+        constructor arguments and follow the workload.  The per-engine
+        pipeline windows follow too: :meth:`choose_windows` collapses a
+        category's window to its observed in-flight occupancy so the
+        modeled pipelined hiding matches the overlap the traffic actually
+        achieved.
 
         Fidelity gating: when the executor shadows offloaded batches
         (``fidelity=``), each profile carries the checker's worst observed
@@ -307,6 +353,9 @@ class PlanRouter:
                     self._router_set_dev[cat] = n
                     self.executor.set_tile_k(cat, t)
                     self._router_set_tile[cat] = t
+                for cat, w in self.choose_windows().items():
+                    self.executor.set_pipeline_window(cat, w)
+                    self._router_set_window[cat] = w
         return plan
 
     def summary(self) -> str:

@@ -73,6 +73,26 @@ from repro.runtime.residency import residency_key
 
 __all__ = ["ShardedOpticalBackend", "shard_sizes", "kernel_halo"]
 
+
+@dataclasses.dataclass
+class _Placement:
+    """One committed sharded placement for a (category, group-shape).
+
+    ``assign`` maps each frame's content key to the pool slot whose device
+    holds it resident; the mapping replicates the executor's exact
+    dispatch structure (per-tile ``shard_sizes`` split over the survivor
+    pool), so a placed tile dispatches the same per-device stack shapes
+    the re-scatter path compiles — warm parity by construction.  The
+    placement outlives tiles AND flushes: frames stay device-resident in
+    the ``ResidencyCache``'s per-device sets until their content changes
+    (only changed frames re-cross the DAC) or a device quarantines (the
+    placement drops and the next commit rebuilds on survivors)."""
+
+    pool: list[int]                 # logical device slots (survivors)
+    devices: list | None            # jax devices (None: sequential fallback)
+    assign: dict[tuple, int]        # frame content key -> pool slot
+    frames: int = 0                 # frames covered at commit time
+
 # Inners frame sharding knows how to drive (group sharding takes any inner).
 _FRAME_INNERS = ("host", "optical-sim", "ideal")
 
@@ -87,6 +107,19 @@ def _device_span(ctx, d: int, frames: int):
     if tr is None:
         return contextlib.nullcontext()
     return tr.span("scatter", lane=f"device{d}", device=d, frames=frames)
+
+
+def _stage_span(ctx, d: int, frames: int):
+    """Span over JUST the host->device staging work for one shard (the
+    ``device_put`` + residency bookkeeping inside the broader ``scatter``
+    span, compute launch excluded).  Summed per flush this is the
+    re-scatter tax a committed placement eliminates: on a resident hit the
+    span closes in microseconds because nothing crosses."""
+    tr = getattr(ctx, "tracer", None)
+    if tr is None:
+        return contextlib.nullcontext()
+    return tr.span("scatter_stage", lane=f"device{d}", device=d,
+                   frames=frames)
 
 
 def _gather_span(ctx, n_blocks: int):
@@ -175,6 +208,8 @@ class ShardedOpticalBackend(ExecutionBackend):
         self._inner: ExecutionBackend | None = None
         self._last_device_samples: list[tuple[int, int]] | None = None
         self._fold_cache: dict[tuple, jax.Array] = {}
+        # (category, frame shape, dtype) -> committed device placement
+        self._placements: dict[tuple, _Placement] = {}
 
     def _folded(self, kernel: jax.Array, ext: int,
                 ctx: BackendContext) -> jax.Array:
@@ -202,6 +237,115 @@ class ShardedOpticalBackend(ExecutionBackend):
         retire time."""
         samples, self._last_device_samples = self._last_device_samples, None
         return samples
+
+    # -- device-resident placements --------------------------------------------
+    def _survivor_pool(self, ctx) -> list[int]:
+        """Logical device slots currently healthy: the fleet minus
+        quarantined devices (device 0 serves alone when all are out)."""
+        q = getattr(ctx, "quarantine", None)
+        clock = getattr(ctx, "clock", None)
+        now = clock() if clock is not None else 0.0
+        n = max(1, int(ctx.n_devices))
+        pool = [d for d in range(n)
+                if q is None or not q.is_quarantined(("device", d), now)]
+        return pool or [0]
+
+    def commit_placement(self, category, xs, ctx, *, kernel=None,
+                         weights=None, tile_sizes=None):
+        """Commit ONE sharded placement for a released group (the executor
+        calls this before its tile loop whenever a residency cache is
+        attached).
+
+        The placement records which pool slot each frame belongs to,
+        replicating the dispatch structure exactly: the group streams as
+        ``tile_sizes`` sub-invocations and each tile shard-splits over the
+        survivor pool, so slot assignment runs per tile.  Frames are NOT
+        staged here — the first placed dispatch ``device_put``s each frame
+        once (a residency miss) and every later tile/flush serves it from
+        the device (a hit, no DAC re-crossing).  Re-committing an
+        unchanged group is free; a changed group re-maps and only the
+        changed frames re-ship.  Returns the placement, or ``None`` when
+        placements do not apply (no cache, single device, frame-sharded
+        mode, or the sequential off-mesh fallback)."""
+        res = getattr(ctx, "residency", None)
+        if res is None or not xs:
+            return None
+        if self._resolve_mode(category, xs, ctx) != "group":
+            return None
+        pool = self._survivor_pool(ctx)
+        sizes = shard_sizes(len(xs), len(pool))
+        pool = pool[:len(sizes)]
+        # the physical device list is indexed by LOGICAL pool id, not by
+        # slot position: a quarantine-shrunk pool like [0, 2, 3] must keep
+        # staging logical device 2's frames on the SAME physical device
+        # its ("device", 2) resident entries already live on, or a shard
+        # would stack label-resident frames with fresh device_puts homed
+        # elsewhere (mixed-device stack -> jit refuses)
+        devices = shard_devices(max(pool) + 1)
+        if devices is None:
+            # fewer real devices than the pool spans: dispatch is the
+            # sequential fallback and nothing is committed device-side
+            return None
+        pkey = (category, tuple(xs[0].shape), str(xs[0].dtype))
+        assign: dict[tuple, int] = {}
+        start = 0
+        for t in (tile_sizes if tile_sizes is not None else [len(xs)]):
+            tile = xs[start:start + t]
+            start += t
+            s0 = 0
+            for slot, size in enumerate(shard_sizes(len(tile), len(pool))):
+                for x in tile[s0:s0 + size]:
+                    assign[ctx.content_key(x)] = slot
+                s0 += size
+        cur = self._placements.get(pkey)
+        if cur is not None and cur.pool == pool and cur.assign == assign:
+            return cur
+        pl = _Placement(pool=pool, devices=devices, assign=assign,
+                        frames=len(xs))
+        self._placements[pkey] = pl
+        tr = getattr(ctx, "tracer", None)
+        if tr is not None:
+            tr.instant("placement", lane="sched", event="commit",
+                       category=category, frames=len(xs),
+                       devices=len(pool),
+                       rebuilt=cur is not None)
+            tr.metrics.counter("placements", event="commit",
+                               category=category).inc()
+        return pl
+
+    def _placement_for(self, category, xs, ctx) -> _Placement | None:
+        """The committed placement covering every frame of ``xs``, if one
+        exists and references only healthy devices; ``None`` routes the
+        dispatch down the legacy re-scatter path."""
+        res = getattr(ctx, "residency", None)
+        if res is None or not xs:
+            return None
+        pl = self._placements.get(
+            (category, tuple(xs[0].shape), str(xs[0].dtype)))
+        if pl is None:
+            return None
+        if any(ctx.content_key(x) not in pl.assign for x in xs):
+            return None
+        q = getattr(ctx, "quarantine", None)
+        if q is not None:
+            clock = getattr(ctx, "clock", None)
+            now = clock() if clock is not None else 0.0
+            if any(q.is_quarantined(("device", d), now) for d in pl.pool):
+                return None
+        return pl
+
+    def _drop_placements_for_device(self, ctx, d: int) -> None:
+        """Quarantine/device-loss cleanup: every placement referencing the
+        dead device drops, so the next commit rebuilds on survivors."""
+        stale = [k for k, pl in self._placements.items() if d in pl.pool]
+        tr = getattr(ctx, "tracer", None)
+        for k in stale:
+            del self._placements[k]
+            if tr is not None:
+                tr.instant("placement", lane="sched", event="invalidate",
+                           category=k[0], device=d)
+                tr.metrics.counter("placements", event="invalidate",
+                                   category=k[0]).inc()
 
     # -- dispatch --------------------------------------------------------------
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
@@ -257,17 +401,15 @@ class ShardedOpticalBackend(ExecutionBackend):
 
     # -- (a) group sharding: scatter the stacked flush group -------------------
     def _run_group(self, category, xs, ctx, kernel, weights):
-        q = getattr(ctx, "quarantine", None)
+        pl = self._placement_for(category, xs, ctx)
+        if pl is not None:
+            return self._run_group_placed(category, xs, ctx, kernel,
+                                          weights, pl)
         clock = getattr(ctx, "clock", None)
-        now = clock() if clock is not None else 0.0
-        n = max(1, int(ctx.n_devices))
         # scatter only across survivors: quarantined devices sit out until
         # their probation window clears (with the whole fleet quarantined,
         # device 0 serves alone rather than the dispatch failing)
-        pool = [d for d in range(n)
-                if q is None or not q.is_quarantined(("device", d), now)]
-        if not pool:
-            pool = [0]
+        pool = self._survivor_pool(ctx)
         # chaos-injected device loss is a property of THIS dispatch only;
         # the injector clears ctx.lost_devices after the run
         lost = frozenset(getattr(ctx, "lost_devices", frozenset()) or ())
@@ -335,14 +477,102 @@ class ShardedOpticalBackend(ExecutionBackend):
             # uncommitted, so jit moves them to whichever device
             # each shard's stack pins the computation to — one
             # cached mask and one content hash serve the whole fleet
-            shard = [jax.device_put(x, devices[slot % len(devices)])
-                     for x in shard]
-            if res is not None:
-                nbytes = sum(int(getattr(x, "nbytes", x.size * 4))
-                             for x in shard)
-                res.store(("device", device), key, list(shard), nbytes,
-                          category=category, kind="shard", ctx=ctx)
+            with _stage_span(ctx, device, len(shard)):
+                shard = [jax.device_put(x, devices[slot % len(devices)])
+                         for x in shard]
+                if res is not None:
+                    nbytes = sum(int(getattr(x, "nbytes", x.size * 4))
+                                 for x in shard)
+                    res.store(("device", device), key, list(shard), nbytes,
+                              category=category, kind="shard", ctx=ctx)
         return self.inner.run(category, shard, ctx, kernel=kernel,
+                              weights=weights)
+
+    def _run_group_placed(self, category, xs, ctx, kernel, weights, pl):
+        """Group sharding through a committed device placement.
+
+        Frames regroup by their committed slot (for a tile sub-stack this
+        reproduces the tile's own ``shard_sizes`` split, so the compiled
+        stack shapes match the re-scatter path) and each shard serves its
+        frames from per-device residency: only frames whose content
+        changed since commit re-cross the host->device boundary, and the
+        per-device output blocks gather only at readout.  A device fault
+        mid-dispatch quarantines the device, drops the placement, and
+        re-runs the shard on a survivor — the next commit rebuilds."""
+        clock = getattr(ctx, "clock", None)
+        lost = frozenset(getattr(ctx, "lost_devices", frozenset()) or ())
+        slots: dict[int, list[int]] = {}
+        for i, x in enumerate(xs):
+            slots.setdefault(pl.assign[ctx.content_key(x)], []).append(i)
+        outs: list = [None] * len(xs)
+        costs: list[StepCost | None] = []
+        samples: list[tuple[int, int]] = []
+        for slot in sorted(slots):
+            idxs = slots[slot]
+            shard = [xs[i] for i in idxs]
+            d = pl.pool[slot]
+            t0 = clock() if clock is not None else 0.0
+            try:
+                if d in lost:
+                    raise DeviceLostError(d)
+                with _device_span(ctx, d, len(shard)):
+                    o, c = self._placed_dispatch(category, shard, ctx,
+                                                 kernel, weights, pl, slot)
+            except FaultError as e:
+                self._note_device_fault(ctx, category, d, e)
+                # drops this placement too (see _quarantine_device), so
+                # the next commit rebuilds on the survivors
+                self._quarantine_device(ctx, d, reason=e.kind)
+                sv = next((s for s in pl.pool if s != d and s not in lost),
+                          d)
+                with _device_span(ctx, sv, len(shard)):
+                    # pl.devices is logical-id indexed, so the survivor's
+                    # own id is the right physical slot for the re-put
+                    o, c = self._shard_dispatch(
+                        category, shard, ctx, kernel, weights, pl.devices,
+                        sv % len(pl.devices), device=sv)
+                d = sv
+            else:
+                dt = (clock() - t0) if clock is not None else 0.0
+                self._observe_shard(ctx, category, d, dt, c)
+            for i, v in zip(idxs, o):
+                outs[i] = v
+            costs.append(c)
+            samples.append((sum(int(x.size) for x in shard),
+                            sum(int(v.size) for v in o)))
+        self._last_device_samples = samples
+        return outs, self._combine(costs, len(slots), ctx)
+
+    def _placed_dispatch(self, category, shard, ctx, kernel, weights, pl,
+                         slot):
+        """One placed shard through the inner backend: every frame is
+        served from (or committed into) its device's resident set at
+        per-frame grain, so a tile sub-range and a repeat flush both hit
+        without re-shipping unchanged neighbors.  The residency store
+        replaces a changed frame's buffer in place — the donation that
+        keeps only *changed* shards re-crossing the DAC."""
+        res = ctx.residency
+        d = pl.pool[slot]
+        # index the physical device by LOGICAL pool id, not slot position:
+        # after a quarantine shrinks the pool, logical device d's resident
+        # frames already live on devices[d], and mixing them with fresh
+        # device_puts on a different physical device breaks jnp.stack
+        dev = pl.devices[d % len(pl.devices)]
+        served = []
+        with _stage_span(ctx, d, len(shard)):
+            for x in shard:
+                key = residency_key(ctx, [x], "frame-shard")
+                cached = res.lookup(("device", d), key, category=category,
+                                    ctx=ctx)
+                if cached is not None:
+                    served.append(cached[0])
+                    continue
+                y = jax.device_put(x, dev)
+                res.store(("device", d), key, [y],
+                          int(getattr(y, "nbytes", y.size * 4)),
+                          category=category, kind="frame-shard", ctx=ctx)
+                served.append(y)
+        return self.inner.run(category, served, ctx, kernel=kernel,
                               weights=weights)
 
     def _observe_shard(self, ctx, category, d, dt_s, cost):
@@ -392,10 +622,12 @@ class ShardedOpticalBackend(ExecutionBackend):
     def _quarantine_device(self, ctx, d, *, reason):
         # a quarantined device's memory is no longer trustworthy (and the
         # scheduler will route around it anyway): drop its resident set so
-        # nothing serves stale bytes when it rejoins the pool
+        # nothing serves stale bytes when it rejoins the pool, and every
+        # placement that mapped frames onto it
         res = getattr(ctx, "residency", None)
         if res is not None:
             res.invalidate_device(("device", d), ctx=ctx)
+        self._drop_placements_for_device(ctx, d)
         q = getattr(ctx, "quarantine", None)
         if q is None:
             return None
@@ -432,18 +664,44 @@ class ShardedOpticalBackend(ExecutionBackend):
         else:
             v = stack
         devices = shard_devices(len(sizes))
+        res = getattr(ctx, "residency", None) if devices is not None \
+            else None
         blocks, costs, samples = [], [], []
         r0 = 0
         for d, rows in enumerate(sizes):
             with _device_span(ctx, d, len(xs)):
                 ext = rows + halo_t + halo_b
-                idx = jnp.arange(r0 - halo_t, r0 + rows + halo_b) % h
-                sub = jnp.take(v, idx, axis=1)
                 k_sub = self._folded(kernel, ext, ctx)
-                if devices is not None:
-                    # the tile is committed; k_sub / its mask stay
-                    # uncommitted and follow it (see _run_group)
-                    sub = jax.device_put(sub, devices[d])
+                # per-device tile residency: the halo slice is a pure
+                # function of the frames' content and the slice geometry
+                # (the range map is frame-derived too), so an unchanged
+                # tile of an unchanged stack serves device-resident on
+                # repeat flushes instead of re-slicing + re-shipping —
+                # the sharded.py:446 fix: tiled re-dispatch no longer
+                # device_puts unchanged sub-stacks
+                tkey = None
+                sub = None
+                if res is not None:
+                    tkey = residency_key(
+                        ctx, list(xs),
+                        f"ctile-{d}-{r0}-{rows}-{halo_t}-{halo_b}")
+                    cached = res.lookup(("device", d), tkey,
+                                        category="conv", ctx=ctx)
+                    if cached is not None:
+                        sub = cached[0]
+                if sub is None:
+                    idx = jnp.arange(r0 - halo_t, r0 + rows + halo_b) % h
+                    sub = jnp.take(v, idx, axis=1)
+                    if devices is not None:
+                        # the tile is committed; k_sub / its mask stay
+                        # uncommitted and follow it (see _run_group)
+                        sub = jax.device_put(sub, devices[d])
+                    if tkey is not None:
+                        res.store(("device", d), tkey, [sub],
+                                  int(getattr(sub, "nbytes",
+                                              sub.size * 4)),
+                                  category="conv", kind="frame-tile",
+                                  ctx=ctx)
                 if optical:
                     out_sub = optical_conv2d_batched(sub, ctx.mask(k_sub),
                                                      ctx.sim_params, None)
@@ -472,15 +730,36 @@ class ShardedOpticalBackend(ExecutionBackend):
                             weights=weights)
         stack = jnp.stack(list(xs))
         devices = shard_devices(len(sizes))
+        res = getattr(ctx, "residency", None) if devices is not None \
+            else None
         blocks, costs, samples = [], [], []
         r0 = 0
         for d, rows in enumerate(sizes):
             with _device_span(ctx, d, len(xs)):
-                sub = stack[:, r0:r0 + rows, :]
-                if devices is not None:
-                    # activations committed per device; uncommitted weights
-                    # follow them under jit (see _run_group)
-                    sub = jax.device_put(sub, devices[d])
+                # per-device tile residency, as in _frame_conv: an
+                # unchanged row block of an unchanged activation stack
+                # stays device-resident across flushes
+                tkey = None
+                sub = None
+                if res is not None:
+                    tkey = residency_key(ctx, list(xs),
+                                         f"mtile-{d}-{r0}-{rows}")
+                    cached = res.lookup(("device", d), tkey,
+                                        category="matmul", ctx=ctx)
+                    if cached is not None:
+                        sub = cached[0]
+                if sub is None:
+                    sub = stack[:, r0:r0 + rows, :]
+                    if devices is not None:
+                        # activations committed per device; uncommitted
+                        # weights follow them under jit (see _run_group)
+                        sub = jax.device_put(sub, devices[d])
+                    if tkey is not None:
+                        res.store(("device", d), tkey, [sub],
+                                  int(getattr(sub, "nbytes",
+                                              sub.size * 4)),
+                                  category="matmul", kind="frame-tile",
+                                  ctx=ctx)
                 if self.inner_name == "optical-sim":
                     out_sub = _optical_matmul_batched(
                         sub, weights, dac_bits=ctx.spec.dac.bits,

@@ -33,7 +33,7 @@ from repro.core.accelerator import StepCost
 from repro.core.planner import CategoryProfile
 from repro.runtime.metrics import Histogram
 
-__all__ = ["BackendStats", "DeviceStats", "RuntimeTelemetry"]
+__all__ = ["BackendStats", "DeviceStats", "RuntimeTelemetry", "WindowStats"]
 
 # Backends whose measured wall time is honest *host* time for planning
 # (sharded-over-host still executes digitally, scattered or not).
@@ -81,6 +81,33 @@ class DeviceStats:
     samples_out: int = 0      # scalars back through THIS device's ADC
 
 
+@dataclasses.dataclass
+class WindowStats:
+    """Per-engine pipeline-window occupancy for one (category, backend).
+
+    Recorded at every dispatch: how many of this engine's invocations were
+    in flight the moment the new one entered its window (including
+    itself), against the window depth it gated on.  The mean occupancy is
+    the overlap the engine *actually achieved* — the measured counterpart
+    of the cost model's ``engines=`` composition claim."""
+
+    dispatches: int = 0       # invocations gated through this window
+    in_flight_sum: int = 0    # sum of occupancy-at-dispatch (incl. self)
+    peak: int = 0             # deepest occupancy observed
+    depth: int = 0            # window depth at the last dispatch
+
+    def add(self, *, in_flight: int, depth: int) -> None:
+        self.dispatches += 1
+        self.in_flight_sum += in_flight
+        self.peak = max(self.peak, in_flight)
+        self.depth = depth
+
+    @property
+    def mean_occupancy(self) -> float:
+        return (self.in_flight_sum / self.dispatches
+                if self.dispatches else 0.0)
+
+
 # How many recent submit timestamps back the arrival-rate estimate (enough
 # to smooth Poisson burstiness, few enough to track a changing rate).
 _ARRIVAL_WINDOW = 64
@@ -118,6 +145,11 @@ class RuntimeTelemetry:
         # hit rate is what the router weighs batch depth against
         self.residency_counts: dict[str, collections.Counter] = \
             collections.defaultdict(collections.Counter)
+        # (category, backend) -> pipeline-window occupancy: the per-engine
+        # in-flight depth each dispatch actually found — the measured
+        # overlap the `engines=` composed price is judged against
+        self.engine_windows: dict[tuple[str, str], WindowStats] = \
+            collections.defaultdict(WindowStats)
         self._t0: float | None = None
         self._window_s: float = 0.0
         self._in_window_s: float = 0.0  # recorded wall inside the window
@@ -196,6 +228,28 @@ class RuntimeTelemetry:
         fault to the caller having a correct result again."""
         self._recovery.setdefault(category, Histogram()).record(max(dt_s,
                                                                     0.0))
+
+    def note_window(self, category: str, backend: str, *,
+                    in_flight: int, depth: int) -> None:
+        """Record one dispatch's pipeline-window occupancy for the
+        ``(category, backend)`` engine (the executor reports at every
+        invocation, after gating on the engine's window)."""
+        self.engine_windows[(category, backend)].add(in_flight=in_flight,
+                                                     depth=depth)
+
+    def window_occupancy(self, category: str | None = None,
+                         backend: str | None = None) -> float:
+        """Mean in-flight-at-dispatch occupancy across the matching engine
+        windows (dispatch-weighted); 0.0 when nothing dispatched."""
+        disp = occ = 0
+        for (cat, be), st in self.engine_windows.items():
+            if category is not None and cat != category:
+                continue
+            if backend is not None and be != backend:
+                continue
+            disp += st.dispatches
+            occ += st.in_flight_sum
+        return occ / disp if disp else 0.0
 
     def note_residency(self, category: str, event: str) -> None:
         """Count one residency-cache event ("hit" / "miss" / "eviction" /
@@ -462,6 +516,12 @@ class RuntimeTelemetry:
                 self._recovery[cat] = h.copy()
         for cat, counts in other.residency_counts.items():
             self.residency_counts[cat].update(counts)
+        for key, st in other.engine_windows.items():
+            mine_w = self.engine_windows[key]
+            mine_w.dispatches += st.dispatches
+            mine_w.in_flight_sum += st.in_flight_sum
+            mine_w.peak = max(mine_w.peak, st.peak)
+            mine_w.depth = st.depth or mine_w.depth
         self._window_s += other._window_s
         self._in_window_s += other._in_window_s
 
@@ -473,6 +533,7 @@ class RuntimeTelemetry:
         self.fault_counts.clear()
         self._recovery.clear()
         self.residency_counts.clear()
+        self.engine_windows.clear()
         self._t0 = None
         self._window_s = 0.0
         self._in_window_s = 0.0
@@ -502,6 +563,12 @@ class RuntimeTelemetry:
                     f"           wall p50={h.percentile(50):.3g}s "
                     f"p95={h.percentile(95):.3g}s "
                     f"p99={h.percentile(99):.3g}s (n={h.n})")
+            w = self.engine_windows.get((cat, backend))
+            if w is not None and w.dispatches:
+                rows.append(
+                    f"           window depth={w.depth} "
+                    f"occupancy={w.mean_occupancy:.2f} peak={w.peak} "
+                    f"(n={w.dispatches})")
         for cat, counts in sorted(self.fault_counts.items()):
             parts = [f"{k} x{c}" for k, c in sorted(counts.items())]
             row = f"  faults[{cat}]: " + "; ".join(parts)

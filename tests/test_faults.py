@@ -452,3 +452,64 @@ def test_chaos_backend_delegates_supports_and_samples():
     with pytest.raises(TransientDispatchError):
         ChaosBackend("host", schedule=FaultSchedule(
             script={0: Fault("error")})).run("fft", [], None)
+
+
+# -- per-engine pipeline windows under faults ------------------------------
+
+
+def _retire_spy(ex):
+    """Record every retirement's ``(wkey, call_ids)`` in retire order."""
+    retired = []
+    orig = ex._retire
+
+    def spy(g):
+        retired.append((g.wkey, [p.call_id for p in g.chunk]))
+        orig(g)
+
+    ex._retire = spy
+    return retired
+
+
+def test_chaos_straggler_does_not_stall_other_engine_window():
+    """A latency spike on engine A's in-flight invocation must not force
+    engine B to retire through it: per-engine pipeline windows gate each
+    ``(category, backend)`` pair independently, so B dispatches while A's
+    straggler is still in flight.  ``shared_window=True`` is the control
+    — the old global two-deep gate retires A's straggler to admit B."""
+    imgs = _images(8)
+    k = jnp.zeros((32, 32)).at[0, 0].set(1.0)
+    for shared in (False, True):
+        name = register_chaos(
+            "optical-sim", name=f"chaos-win-{int(shared)}",
+            script={0: Fault("straggle", delay_s=5.0)})
+        clk = ManualClock()
+        ex = OffloadExecutor(BATCHED_4F, max_batch=2, pipeline_depth=2,
+                             clock=clk, shared_window=shared)
+        retired = _retire_spy(ex)
+        # engine A: two fft invocations through the chaos backend — the
+        # first carries the injected straggle and stays in flight
+        for im in imgs[:4]:
+            ex.submit("fft", im, backend=name)
+        ex.flush_async()
+        assert [g.wkey for g in ex._inflight] == [("fft", name)] * 2
+        # engine B: two conv invocations through the plain optical engine
+        for im in imgs[4:]:
+            ex.submit("conv", im, kernel=k, backend="optical-sim")
+        ex.flush_async()
+        forced = [w for w, _ in retired]
+        if shared:
+            # the global gate admitted conv only by retiring through the
+            # straggling fft invocation — the stall this PR removes
+            assert ("fft", name) in forced
+        else:
+            # fft's window is full but conv's own window is empty:
+            # nothing retires, all four invocations ride in flight
+            assert forced == []
+            assert [g.wkey for g in ex._inflight] == \
+                [("fft", name)] * 2 + [("conv", "optical-sim")] * 2
+        ex.drain()
+        # retirement stays submit-ordered WITHIN each engine either way
+        for wkey in {w for w, _ in retired}:
+            ids = [i for w, grp in retired for i in grp if w == wkey]
+            assert ids == sorted(ids)
+        assert ex.telemetry.fault_counts["fft"]["straggle"] == 1

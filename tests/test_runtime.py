@@ -873,7 +873,8 @@ def test_telemetry_merge_reset_cover_every_field():
 
     expected = sorted([
         "stats", "device_stats", "_submits", "_latency", "fault_counts",
-        "_recovery", "residency_counts", "_t0", "_window_s", "_in_window_s",
+        "_recovery", "residency_counts", "engine_windows", "_t0",
+        "_window_s", "_in_window_s",
     ])
     tel = RuntimeTelemetry()
     assert sorted(vars(tel)) == expected, (
@@ -897,6 +898,8 @@ def test_telemetry_merge_reset_cover_every_field():
     tel.note_residency("fft", "hit")
     tel.note_residency("fft", "miss")
     tel.note_residency("conv", "eviction")
+    tel.note_window("fft", "optical-sim", in_flight=2, depth=2)
+    tel.note_window("conv", "host", in_flight=1, depth=3)
     tel.stop()
 
     def norm(v):
@@ -926,3 +929,82 @@ def test_telemetry_merge_reset_cover_every_field():
 
     tel.reset()
     assert snapshot(tel) == snapshot(RuntimeTelemetry())
+
+
+# --- engines= composition mode (per-engine pipeline windows, priced) -----------
+
+
+@pytest.mark.parametrize("spec,n_in", [(LANED_4F, 4096),
+                                       (ANDERSON_MVM, 512)])
+def test_single_engine_composition_equals_pipelined_price(spec, n_in):
+    """One engine composed alone IS the pipelined price: the cross-engine
+    collapse and the pipeline_depth collapse share one overlap discipline
+    (`_compose_sides`), so a degenerate engines= call must agree exactly."""
+    for depth in (1, 2):
+        direct = spec.batched_step_cost(n_in, batch=8, pipeline_depth=depth)
+        composed = spec.batched_step_cost(n_in, engines={
+            "only": {"n_in": n_in, "batch": 8, "pipeline_depth": depth}})
+        assert composed.total_s == pytest.approx(direct.total_s, rel=1e-12)
+        assert composed.dac_s + composed.adc_s == \
+            pytest.approx(direct.dac_s + direct.adc_s, rel=1e-12)
+
+
+@pytest.mark.parametrize("spec,n_in", [(LANED_4F, 4096),
+                                       (ANDERSON_MVM, 512)])
+def test_multi_engine_composition_bounds(spec, n_in):
+    """Two engines composed overlap reads behind writes: the composed wall
+    is never more than the serial sum and never less than either engine
+    alone (writes serialize on the shared host staging resource)."""
+    kw_a = {"n_in": n_in, "batch": 8, "pipeline_depth": 2}
+    kw_b = {"n_in": n_in, "batch": 4, "pipeline_depth": 2}
+    a = spec.batched_step_cost(n_in, batch=8, pipeline_depth=2)
+    b = spec.batched_step_cost(n_in, batch=4, pipeline_depth=2)
+    both = spec.batched_step_cost(n_in, engines={"a": kw_a, "b": kw_b})
+    assert both.total_s <= a.total_s + b.total_s + 1e-15
+    assert both.total_s >= max(a.total_s, b.total_s) - 1e-15
+    # pre-priced StepCost entries compose too (the executor's path when
+    # the per-engine prices were already computed at dispatch)
+    pre = spec.batched_step_cost(n_in, engines={"a": a, "b": b})
+    assert pre.total_s <= a.total_s + b.total_s + 1e-15
+
+
+def test_engines_mode_validation():
+    with pytest.raises(ValueError):
+        LANED_4F.batched_step_cost(4096, engines={})
+    with pytest.raises(ValueError):
+        LANED_4F.batched_step_cost(4096, engines={
+            "a": {"n_in": 4096, "warp_factor": 9}})
+    with pytest.raises(ValueError):
+        ANDERSON_MVM.batched_step_cost(512, engines={
+            "a": {"n_in": 512, "warp_factor": 9}})
+
+
+# --- per-engine pipeline windows: executor accessors ---------------------------
+
+
+def test_pipeline_window_accessors_and_validation():
+    ex = OffloadExecutor(LANED_4F, pipeline_depth=3)
+    assert ex.pipeline_window_for("fft") == 3     # global default
+    ex.set_pipeline_window("fft", 1)
+    assert ex.pipeline_window_for("fft") == 1
+    assert ex.pipeline_window_for("conv") == 3    # untouched category
+    assert ex.category_windows() == {"fft": 1}
+    with pytest.raises(ValueError):
+        ex.set_pipeline_window("fft", 0)
+
+
+def test_window_occupancy_telemetry_recorded_per_engine():
+    """Every dispatch notes its engine's in-flight occupancy; two engines
+    in one flush land separate WindowStats rows."""
+    imgs = _imgs(4, (16, 16))
+    k = jnp.zeros((16, 16)).at[0, 0].set(1.0)
+    ex = OffloadExecutor(LANED_4F, max_batch=2, pipeline_depth=2)
+    for im in imgs:
+        ex.submit("fft", im, backend="host")
+        ex.submit("conv", im, kernel=k, backend="host")
+    ex.flush()
+    tel = ex.telemetry
+    assert tel.engine_windows[("fft", "host")].dispatches == 2
+    assert tel.engine_windows[("conv", "host")].dispatches == 2
+    assert 1.0 <= tel.window_occupancy("fft") <= 2.0
+    assert tel.engine_windows[("fft", "host")].depth == 2

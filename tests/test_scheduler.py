@@ -611,3 +611,53 @@ def test_run_and_get_force_release_held_groups_under_manual_clock():
     ref1 = OffloadExecutor(SPEC, max_batch=1).run(
         "fft", _imgs(1, (8, 8), seed=1)[0])
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref1))
+
+
+# --- adaptive per-engine pipeline windows (router) -----------------------------
+
+
+def test_replan_collapses_window_to_observed_overlap():
+    """Traffic that never overlapped in flight earns no pipelined-hiding
+    credit: replan writes the category's window down to its measured
+    in-flight-at-dispatch occupancy.  One group per flush means occupancy
+    1 at every dispatch, so the chosen window is 1."""
+    ex = OffloadExecutor(SPEC, max_batch=8, pipeline_depth=2)
+    router = PlanRouter(ex)
+    imgs = _imgs(8, (16, 16))
+    ex.telemetry.start()
+    for im in imgs:
+        ex.submit("fft", im, backend="host")
+        ex.flush()          # one invocation per flush: no overlap ever
+    ex.telemetry.stop()
+    assert router.choose_windows() == {"fft": 1}
+    router.replan()
+    assert ex.pipeline_window_for("fft") == 1
+    # deep traffic keeps the global depth: four invocations in one flush
+    ex2 = OffloadExecutor(SPEC, max_batch=2, pipeline_depth=2)
+    router2 = PlanRouter(ex2)
+    ex2.telemetry.start()
+    for im in imgs:
+        ex2.submit("fft", im, backend="host")
+    ex2.flush()             # 4 invocations ride the two-deep window
+    ex2.telemetry.stop()
+    assert router2.choose_windows()["fft"] == 2
+    router2.replan()
+    assert ex2.pipeline_window_for("fft") == 2
+
+
+def test_operator_window_pin_bounds_adaptive_choice():
+    """A window the operator pinned is a ceiling replan never exceeds —
+    and never destroys: the snapshot survives the router's own writes."""
+    ex = OffloadExecutor(SPEC, max_batch=2, pipeline_depth=3)
+    router = PlanRouter(ex)
+    ex.set_pipeline_window("fft", 1)   # operator pin below the global 3
+    imgs = _imgs(6, (16, 16))
+    ex.telemetry.start()
+    for im in imgs:
+        ex.submit("fft", im, backend="host")
+    ex.flush()
+    ex.telemetry.stop()
+    router.replan()
+    assert ex.pipeline_window_for("fft") == 1   # pin respected
+    router.replan()                             # router's own write is not
+    assert ex.pipeline_window_for("fft") == 1   # mistaken for an operator pin

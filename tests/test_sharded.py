@@ -616,3 +616,185 @@ def test_sharded_dispatch_scatters_across_forced_devices():
     assert len(out["devices_used"]) == 4, out
     assert len(out["per_device"]) == 4
     assert out["optical_group_devices"] == 4
+
+
+# --- per-engine windows + device-resident placements --------------------------
+
+
+def test_warm_primes_per_engine_window_and_placed_shapes():
+    """warm() must run the category at its per-engine window depth (the
+    context's pipeline depth feeds the tile choice and the modeled price)
+    and restore the context afterwards — and the shard stacks it warms
+    must cover what a committed-placement flush dispatches: the placement
+    regroups frames by the same ``shard_sizes`` split the re-scatter path
+    uses, so warmed shapes ARE placed shapes by construction."""
+    ex = OffloadExecutor(SPEC, max_batch=6, n_devices=3,
+                         default_backend="sharded-host", residency=True)
+    ex.set_pipeline_window("fft", 3)
+    be = ex._backend("sharded-host")
+    seen: list[tuple] = []
+    depths: list[int] = []
+    inner = be.inner
+    orig = inner.run
+
+    def spy(category, xs, ctx, **kw):
+        seen.append((len(xs),) + tuple(xs[0].shape))
+        depths.append(ctx.pipeline_depth)
+        return orig(category, xs, ctx, **kw)
+
+    inner.run = spy
+    try:
+        (im,) = _imgs(1, (16, 12))
+        saved_depth = ex.ctx.pipeline_depth
+        ex.warm("fft", im, batch=6)
+        assert depths and all(d == 3 for d in depths)  # pinned window depth
+        assert ex.ctx.pipeline_depth == saved_depth    # restored after warm
+        warmed, seen[:] = set(seen), []
+        for h in [ex.submit("fft", x) for x in _imgs(6, (16, 12))]:
+            h.get()
+        flushed = set(seen)
+        flush_depths = list(depths[len(warmed):] or depths)
+    finally:
+        inner.run = orig
+    assert flushed <= warmed, (flushed, warmed)
+    assert ex.ctx.pipeline_depth == 3  # dispatch ran at the pinned window
+
+
+def test_placement_not_committed_without_residency_or_off_mesh():
+    """Placements are gated exactly like shard residency: no residency
+    cache, or no real device mesh (the sequential off-mesh fallback),
+    means no commit — dispatch stays on the legacy re-scatter path."""
+    imgs = _imgs(6, (16, 12))
+    ex = OffloadExecutor(SPEC, max_batch=6, n_devices=3,
+                         default_backend="sharded-host")
+    for h in [ex.submit("fft", x) for x in imgs]:
+        h.get()
+    assert not ex._backend("sharded-host")._placements
+    # residency on, but a single-CPU mesh cannot host 3 shards: the
+    # sequential fallback commits nothing (shard_devices returns None)
+    ex_r = OffloadExecutor(SPEC, max_batch=6, n_devices=3,
+                          default_backend="sharded-host", residency=True)
+    for h in [ex_r.submit("fft", x) for x in imgs]:
+        h.get()
+    if shard_devices(3) is None:
+        assert not ex_r._backend("sharded-host")._placements
+
+
+_PLACEMENT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import time
+import jax
+import numpy as np
+from repro.runtime import OffloadExecutor
+
+assert len(jax.devices()) == 4
+
+K = 16
+key = jax.random.PRNGKey(3)
+imgs = [jax.random.uniform(jax.random.fold_in(key, i), (16, 12))
+        for i in range(K)]
+
+# looped single-device host baseline: the equivalence anchor
+base = OffloadExecutor(max_batch=1, default_backend="host")
+want = [np.asarray(h.value) for h in
+        ([base.submit("fft", im) for im in imgs], base.flush())[0]]
+
+
+def check(handles):
+    for h, w in zip(handles, want):
+        np.testing.assert_array_equal(np.asarray(h.value), w)
+
+
+def timed(ex, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        hs = [ex.submit("fft", im) for im in imgs]
+        t0 = time.perf_counter()
+        ex.flush()
+        best = min(best, time.perf_counter() - t0)
+    return best, hs
+
+
+# 1. commit + repeat-flush hits, bit-equal to the looped baseline
+ex = OffloadExecutor(max_batch=K, n_devices=4,
+                     default_backend="sharded-host", residency=True)
+ex.warm("fft", imgs[0], batch=K)
+hs = [ex.submit("fft", im) for im in imgs]
+ex.flush()
+check(hs)
+be = ex._backend("sharded-host")
+assert be._placements, "first flush must commit a placement"
+pkey, pl = next(iter(be._placements.items()))
+assert pl.pool == [0, 1, 2, 3] and pl.frames == K
+hs = [ex.submit("fft", im) for im in imgs]
+ex.flush()
+check(hs)
+hits = dict(ex.telemetry.residency_counts["fft"])
+assert hits.get("hit", 0) >= K, hits   # repeat flush rode the placement
+
+# 2. tiled dispatch routes tile sub-stacks through the SAME placement
+ex.set_tile_k("fft", 5)
+hs = [ex.submit("fft", im) for im in imgs]
+ex.flush()
+check(hs)
+assert be._placements, "tiled flush must re-commit, not abandon, placement"
+
+# 3. device loss mid-placed-dispatch: quarantine, drop, serve from survivor
+ex.set_tile_k("fft", K)
+ex.ctx.lost_devices = frozenset({1})
+hs = [ex.submit("fft", im) for im in imgs]
+ex.flush()
+ex.ctx.lost_devices = frozenset()
+check(hs)                               # every frame retired, bit-equal
+assert ex.quarantine.is_quarantined(("device", 1), ex.now())
+assert not be._placements, "fault must drop the placement"
+
+# 4. next flush rebuilds on the survivors only
+hs = [ex.submit("fft", im) for im in imgs]
+ex.flush()
+check(hs)
+(_, pl2), = be._placements.items()
+assert pl2.pool == [0, 2, 3], pl2.pool  # quarantined device excluded
+
+# 5. CI-smoke mirror: resident repeat-flush wall <= re-scatter wall at K=16
+rescatter = OffloadExecutor(max_batch=K, n_devices=4,
+                            default_backend="sharded-host")
+rescatter.warm("fft", imgs[0], batch=K)
+wall_rescatter, hs = timed(rescatter)
+check(hs)
+resident = OffloadExecutor(max_batch=K, n_devices=4,
+                           default_backend="sharded-host", residency=True)
+resident.warm("fft", imgs[0], batch=K)
+for im in imgs:
+    resident.submit("fft", im)
+resident.flush()                        # priming flush commits + stages
+wall_resident, hs = timed(resident)
+check(hs)
+
+print("RESULT:" + json.dumps({
+    "resident_wall_s": wall_resident,
+    "rescatter_wall_s": wall_rescatter,
+    "hit_rate": resident.telemetry.residency_hit_rate("fft"),
+}))
+"""
+
+
+@pytest.mark.slow
+def test_placement_lifecycle_on_forced_devices():
+    """Commit -> repeat-flush hits -> tiled re-commit -> device-loss drop ->
+    survivor rebuild, bit-equal to the looped host baseline throughout,
+    and the resident repeat-flush wall beats the re-scatter wall (the CI
+    multi-device smoke's assertion, runnable locally)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", _PLACEMENT_SCRIPT],
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env,
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    assert out["resident_wall_s"] <= out["rescatter_wall_s"], out
+    assert out["hit_rate"] > 0.5, out
