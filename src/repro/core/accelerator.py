@@ -241,6 +241,7 @@ class OpticalFourierAcceleratorSpec:
 
     def _batched_sides(self, n_in: int, n_out: int, batch: int,
                        write_batch: int | None = None,
+                       write_scale: float = 1.0,
                        ) -> tuple[float, float, float, float, float, int]:
         """Unoverlapped resource totals of ONE invocation carrying
         ``batch`` inputs on one device: (dac_s, adc_s, intf_in, intf_out,
@@ -254,7 +255,14 @@ class OpticalFourierAcceleratorSpec:
         *resident* on the device from an earlier staging, so they pay no
         DAC conversion, no SLM link transfer, and no write-side frame
         handshake.  The read side always prices the full ``batch``: every
-        result still crosses the detector + ADC."""
+        result still crosses the detector + ADC.
+
+        ``write_scale`` (default 1.0) scales the per-sample write terms —
+        DAC conversion and SLM link transfer — for *delta-encoded* writes:
+        an X2X-ladder DAC rewriting a staged operand pays only for the
+        LSBs that flip, so a low-delta write crosses a fraction of the
+        write path.  The per-frame handshake stays whole (the frame sync
+        does not shrink with the payload)."""
         caps = self.phase_shift_captures
         px = max(self.usable_pixels, 1)
         frames = max(1, math.ceil(batch * n_in / px))
@@ -263,8 +271,11 @@ class OpticalFourierAcceleratorSpec:
             else math.ceil(wb * n_in / px)
         dac_s = self.dac.time_for(wb * n_in, self.dac_lanes) if wb else 0.0
         adc_s = self.adc.time_for(batch * n_out, self.adc_lanes) * caps
-        intf_in = (wb * n_in / self.slm_interface_hz
-                   + wframes * self.interface_latency_s)
+        link_in = wb * n_in / self.slm_interface_hz
+        if write_scale != 1.0:
+            dac_s *= write_scale
+            link_in *= write_scale
+        intf_in = link_in + wframes * self.interface_latency_s
         intf_out = caps * batch * n_out / self.camera_interface_hz
         analog_s = (frames * (self.slm_settle_s + self.exposure_s) * caps
                     + self.time_of_flight_s())
@@ -275,6 +286,7 @@ class OpticalFourierAcceleratorSpec:
                      tile_k: int | None, mem_budget,
                      resident_frames: int, weight_samples: int,
                      resident_weights: int,
+                     delta_fractions: tuple = (),
                      ) -> tuple[float, float, float, float, float, float,
                                 int]:
         """Unoverlapped totals of one (possibly tiled, sharded, partially
@@ -283,7 +295,14 @@ class OpticalFourierAcceleratorSpec:
         :meth:`batched_step_cost` (which then applies the intra-invocation
         pipeline collapse) and the ``engines=`` composition mode (which
         applies a cross-engine collapse instead) price from — one
-        definition of the physics, two overlap disciplines."""
+        definition of the physics, two overlap disciplines.
+
+        ``delta_fractions`` are per-frame write scales in (0, 1] for the
+        *delta-staged* subset of the written frames: frame order within
+        each tile is resident → delta → full, so the tile's written share
+        crosses the write path at the mean of its delta scales (full
+        writes count 1.0).  ``resident_frames + len(delta_fractions)``
+        must not exceed ``batch``."""
         if n_out is None:
             n_out = n_in
         if batch < 1:
@@ -294,6 +313,13 @@ class OpticalFourierAcceleratorSpec:
             raise ValueError("n_devices must be >= 1")
         if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
             raise ValueError("residency counts must be >= 0")
+        deltas = tuple(float(f) for f in delta_fractions)
+        for f in deltas:
+            if not 0.0 < f <= 1.0:
+                raise ValueError("delta fractions must be in (0, 1]")
+        if len(deltas) + min(int(resident_frames), batch) > batch:
+            raise ValueError(
+                "resident_frames + len(delta_fractions) exceeds batch")
         if tile_k is None and mem_budget is not None:
             tile_k = mem_budget.tile_for_group(
                 n_in, n_out, batch, pipeline_depth=pipeline_depth)
@@ -303,6 +329,7 @@ class OpticalFourierAcceleratorSpec:
         dac_s = adc_s = intf_in = intf_out = analog_s = sync_s = 0.0
         stages = 0
         remaining = min(int(resident_frames), batch)
+        di = 0
         for b in sizes:
             eff = min(n_devices, b)
             pb = math.ceil(b / eff)
@@ -311,8 +338,16 @@ class OpticalFourierAcceleratorSpec:
             # the tile's non-resident share crosses the write path, split
             # per device the same way the frames themselves are
             wb = pb - min(math.ceil(res_b / eff), pb)
+            written = b - res_b
+            take = min(len(deltas) - di, written)
+            if take > 0 and written:
+                tile_deltas = deltas[di:di + take]
+                di += take
+                ws = (math.fsum(tile_deltas) + (written - take)) / written
+            else:
+                ws = 1.0
             d, a, i1, i2, an, fr = self._batched_sides(
-                n_in, n_out, pb, write_batch=wb)
+                n_in, n_out, pb, write_batch=wb, write_scale=ws)
             dac_s += d
             adc_s += a
             intf_in += i1
@@ -364,7 +399,8 @@ class OpticalFourierAcceleratorSpec:
                 mem_budget=kw.pop("mem_budget", None),
                 resident_frames=kw.pop("resident_frames", 0),
                 weight_samples=kw.pop("weight_samples", 0),
-                resident_weights=kw.pop("resident_weights", 0))
+                resident_weights=kw.pop("resident_weights", 0),
+                delta_fractions=kw.pop("delta_fractions", ()))
             if kw:
                 raise ValueError(f"unknown engine kwargs for {name!r}: "
                                  f"{sorted(kw)}")
@@ -380,6 +416,7 @@ class OpticalFourierAcceleratorSpec:
                           resident_frames: int = 0,
                           weight_samples: int = 0,
                           resident_weights: int = 0,
+                          delta_fractions: tuple = (),
                           engines=None) -> StepCost:
         """Cost of one invocation carrying ``batch`` same-shape inputs.
 
@@ -461,6 +498,20 @@ class OpticalFourierAcceleratorSpec:
         writes nothing.  All three default to 0: the historical price,
         bit for bit.
 
+        ``delta_fractions`` prices *delta-encoded* staging (the residency
+        cache's third price between free hit and full re-stage): each
+        entry is the write scale in (0, 1] of one written frame whose
+        staged codes differ from the new operand by only that fraction of
+        LSB flips — an X2X-ladder DAC pays for flipped LSBs, not whole
+        words.  Delta frames scale the per-sample write terms (DAC
+        conversion, SLM link transfer) while the frame handshake and the
+        entire read side stay whole, so the price is guaranteed to land
+        between the residency-hit price (``delta_fractions`` can never
+        reach 0) and the full-write price (scales cap at 1.0).
+        ``resident_frames + len(delta_fractions)`` must not exceed
+        ``batch``; the default empty tuple reproduces the historical
+        price bit for bit.
+
         ``engines`` switches to the *composition* mode pricing the
         executor's per-engine pipeline windows: a mapping of engine name →
         either a kwargs dict for this method (``n_in`` required, same
@@ -479,7 +530,8 @@ class OpticalFourierAcceleratorSpec:
                               mem_budget=mem_budget,
                               resident_frames=resident_frames,
                               weight_samples=weight_samples,
-                              resident_weights=resident_weights))
+                              resident_weights=resident_weights,
+                              delta_fractions=delta_fractions))
         if pipeline_depth >= 2 and stages > 1:
             write_side = dac_s + intf_in
             read_side = adc_s + intf_out + analog_s
@@ -538,13 +590,16 @@ class OpticalMVMAcceleratorSpec:
                      tile_k: int | None, mem_budget,
                      resident_frames: int, weight_samples: int,
                      resident_weights: int,
+                     delta_fractions: tuple = (),
                      ) -> tuple[float, float, float, float, float, float,
                                 int]:
         """Unoverlapped totals of one invocation in the shared side layout
         ``(dac_s, adc_s, intf_in, intf_out, analog_s, serial_s, stages)``.
         The MVM handshake has no known write/read split, so it rides the
         serial slot (with the sync barriers) and the in/out interface
-        slots stay zero."""
+        slots stay zero.  ``delta_fractions`` scale the written frames'
+        DAC term exactly as on the 4f family (resident → delta → full
+        frame order per tile; the handshake stays whole)."""
         if n_out is None:
             n_out = n_in
         if batch < 1:
@@ -555,6 +610,13 @@ class OpticalMVMAcceleratorSpec:
             raise ValueError("n_devices must be >= 1")
         if resident_frames < 0 or weight_samples < 0 or resident_weights < 0:
             raise ValueError("residency counts must be >= 0")
+        deltas = tuple(float(f) for f in delta_fractions)
+        for f in deltas:
+            if not 0.0 < f <= 1.0:
+                raise ValueError("delta fractions must be in (0, 1]")
+        if len(deltas) + min(int(resident_frames), batch) > batch:
+            raise ValueError(
+                "resident_frames + len(delta_fractions) exceeds batch")
         if tile_k is None and mem_budget is not None:
             tile_k = mem_budget.tile_for_group(
                 n_in, n_out, batch, pipeline_depth=pipeline_depth)
@@ -564,14 +626,22 @@ class OpticalMVMAcceleratorSpec:
         dac_s = adc_s = analog_s = intf_s = 0.0
         stages = 0
         remaining = min(int(resident_frames), batch)
+        di = 0
         for b in sizes:
             eff = min(n_devices, b)
             pb = math.ceil(b / eff)
             res_b = min(remaining, b)
             remaining -= res_b
             wb = pb - min(math.ceil(res_b / eff), pb)
+            written = b - res_b
+            take = min(len(deltas) - di, written)
             if wb:
-                dac_s += self.dac.time_for(wb * n_in, self.dac_lanes)
+                d = self.dac.time_for(wb * n_in, self.dac_lanes)
+                if take > 0 and written:
+                    tile_deltas = deltas[di:di + take]
+                    di += take
+                    d *= (math.fsum(tile_deltas) + (written - take)) / written
+                dac_s += d
             adc_s += self.adc.time_for(pb * n_out, self.adc_lanes)
             analog_s += pb * self.optical_pass_s
             intf_s += self.interface_latency_s
@@ -611,7 +681,8 @@ class OpticalMVMAcceleratorSpec:
                 mem_budget=kw.pop("mem_budget", None),
                 resident_frames=kw.pop("resident_frames", 0),
                 weight_samples=kw.pop("weight_samples", 0),
-                resident_weights=kw.pop("resident_weights", 0))
+                resident_weights=kw.pop("resident_weights", 0),
+                delta_fractions=kw.pop("delta_fractions", ()))
             if kw:
                 raise ValueError(f"unknown engine kwargs for {name!r}: "
                                  f"{sorted(kw)}")
@@ -627,6 +698,7 @@ class OpticalMVMAcceleratorSpec:
                           resident_frames: int = 0,
                           weight_samples: int = 0,
                           resident_weights: int = 0,
+                          delta_fractions: tuple = (),
                           engines=None) -> StepCost:
         """One invocation streaming ``batch`` same-shape activation sets.
 
@@ -666,6 +738,12 @@ class OpticalMVMAcceleratorSpec:
         that keeps that assumption honest).  Defaults of 0 reproduce the
         historical price bit for bit.
 
+        ``delta_fractions`` prices delta-encoded staging exactly as on the
+        4f family: per-written-frame write scales in (0, 1] applied to the
+        input DAC term (the handshake and read side stay whole), with
+        ``resident_frames + len(delta_fractions) <= batch`` enforced and
+        hit ≤ delta ≤ full-write pricing guaranteed by construction.
+
         ``engines`` switches to the cross-engine composition mode, exactly
         as on the 4f family.
         """
@@ -679,7 +757,8 @@ class OpticalMVMAcceleratorSpec:
                               mem_budget=mem_budget,
                               resident_frames=resident_frames,
                               weight_samples=weight_samples,
-                              resident_weights=resident_weights))
+                              resident_weights=resident_weights,
+                              delta_fractions=delta_fractions))
         if pipeline_depth >= 2 and stages > 1:
             hidden = 1.0 / stages
             if dac_s <= adc_s + analog_s:

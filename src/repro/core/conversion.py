@@ -30,6 +30,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 __all__ = [
     "ConverterSpec",
     "KIM_2019_DAC",
@@ -39,6 +41,12 @@ __all__ = [
     "pareto_power_w",
     "frontier_gap",
     "conversion_complexity",
+    "CodeSignature",
+    "SIGNATURE_FULL_CODE_MAX",
+    "quantized_codes",
+    "code_signature",
+    "expected_flip_fraction",
+    "delta_write_scale",
 ]
 
 
@@ -199,3 +207,105 @@ def conversion_complexity(n: int) -> int:
     if n < 0:
         raise ValueError("n must be non-negative")
     return 2 * n
+
+
+# --- LSB-flip model: delta-encoded DAC writes --------------------------------
+#
+# Ladder-style DACs (the X2X ladder of Wang et al., JSSC 2022) spend write
+# latency/energy on the LSBs that actually CHANGE between consecutive codes,
+# not on the full word: rewriting an unchanged operand is near-free, and a
+# slowly drifting one costs only its expected flip count.  The functions
+# below turn that physics into a ``write_scale`` in (0, 1] the cost models
+# apply to the write-side DAC/link terms — the third price between a free
+# residency hit and a full re-stage.
+
+# Operands up to this many samples retain their full quantized codes in the
+# signature, so the flip fraction is the EXACT mean XOR popcount.  Larger
+# operands keep only per-bit-plane popcounts (bits integers per operand) and
+# estimate the flip fraction from plane densities.
+SIGNATURE_FULL_CODE_MAX = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CodeSignature:
+    """A cheap summary of an operand's quantized DAC codes.
+
+    ``plane_counts[b]`` is the popcount of bit-plane ``b`` across all ``n``
+    codes; ``codes`` holds the full code array for small operands (exact
+    flip counting) and ``None`` past :data:`SIGNATURE_FULL_CODE_MAX`.
+    """
+
+    bits: int
+    n: int
+    plane_counts: tuple[int, ...]
+    codes: np.ndarray | None = None
+
+
+def quantized_codes(arr, bits: int) -> np.ndarray:
+    """The integer DAC codes ``arr`` quantizes to at ``bits`` resolution.
+
+    Mirrors the runtime's write-path range mapping: an affine map of the
+    operand's own [min, max] onto the converter's full scale, rounded to
+    the nearest of ``2^bits`` levels.  A constant operand maps to code 0.
+    """
+    if bits < 1:
+        raise ValueError("bits must be >= 1")
+    a = np.asarray(arr, dtype=np.float64).ravel()
+    if a.size == 0:
+        return np.zeros(0, dtype=np.uint16 if bits <= 16 else np.int64)
+    lo = float(a.min())
+    span = float(a.max()) - lo
+    levels = (1 << bits) - 1
+    if span <= 0.0:
+        codes = np.zeros(a.shape, dtype=np.int64)
+    else:
+        codes = np.rint((a - lo) * (levels / span)).astype(np.int64)
+    return codes.astype(np.uint16 if bits <= 16 else np.int64)
+
+
+def code_signature(arr, bits: int, *,
+                   full_code_max: int = SIGNATURE_FULL_CODE_MAX,
+                   ) -> CodeSignature:
+    """Build the :class:`CodeSignature` of ``arr`` at ``bits`` resolution."""
+    codes = quantized_codes(arr, bits)
+    planes = tuple(int(((codes >> b) & 1).sum()) for b in range(bits))
+    keep = codes if codes.size <= full_code_max else None
+    return CodeSignature(bits=bits, n=int(codes.size), plane_counts=planes,
+                         codes=keep)
+
+
+def expected_flip_fraction(old: CodeSignature, new: CodeSignature) -> float:
+    """Expected fraction of LSBs flipping when ``old``'s staged codes are
+    rewritten with ``new``'s, in [0, 1].
+
+    Exact (mean XOR popcount over all bit planes) when both signatures
+    retain full codes; otherwise estimated per plane from the densities
+    ``p``/``q`` under independence (``p + q - 2pq`` — an upper bound on the
+    true per-plane flip rate ``|p - q|``, so the estimate never undercharges
+    a correlated drift).  Incomparable signatures (different resolution or
+    sample count) are a full rewrite: 1.0.
+    """
+    if old.bits != new.bits or old.n != new.n or old.n == 0:
+        return 1.0
+    bits = old.bits
+    if old.codes is not None and new.codes is not None:
+        x = np.bitwise_xor(old.codes, new.codes)
+        flips = sum(int(((x >> b) & 1).sum()) for b in range(bits))
+        return flips / (old.n * bits)
+    total = 0.0
+    for b in range(bits):
+        p = old.plane_counts[b] / old.n
+        q = new.plane_counts[b] / new.n
+        total += p + q - 2.0 * p * q
+    return min(1.0, total / bits)
+
+
+def delta_write_scale(flip_fraction: float, bits: int) -> float:
+    """Write-side cost scale for a delta-encoded DAC write: the fraction of
+    ladder LSB transitions a partial rewrite performs, floored at ``1/bits``
+    (even a bit-identical re-assert strobes one ladder slot per sample, so a
+    delta write is never free — only a residency *hit* is)."""
+    if bits < 1:
+        raise ValueError("bits must be >= 1")
+    f = min(max(float(flip_fraction), 0.0), 1.0)
+    return min(1.0, max(f, 1.0 / bits))

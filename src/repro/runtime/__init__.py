@@ -174,6 +174,7 @@ from repro.runtime.metrics import (
     drift_report,
 )
 from repro.runtime.residency import (
+    DELTA_THRESHOLD,
     ResidencyCache,
     ResidencyEntry,
     operating_point,
@@ -185,6 +186,7 @@ from repro.runtime.sharded import ShardedOpticalBackend, kernel_halo, shard_size
 from repro.runtime.specs import BATCHED_4F, CAMERA_ADC, SLM_DAC
 from repro.runtime.telemetry import (
     BackendStats,
+    DeltaStats,
     DeviceStats,
     RuntimeTelemetry,
     WindowStats,
@@ -245,6 +247,8 @@ __all__ = [
     "kernel_halo",
     "shard_sizes",
     "BackendStats",
+    "DELTA_THRESHOLD",
+    "DeltaStats",
     "DeviceStats",
     "RuntimeTelemetry",
     "WindowStats",

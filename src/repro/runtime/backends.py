@@ -45,6 +45,7 @@ import abc
 import dataclasses
 import functools
 import hashlib
+import math
 import time
 from typing import Callable, Sequence
 
@@ -171,6 +172,13 @@ class BackendContext:
     # sharded backend keeps per-device placement sets), so repeat flushes
     # of unchanged operands skip staging and are priced read-side-only.
     residency: "object | None" = None
+    # Which physical write stream ``stage_group`` is staging into: "host"
+    # for the staged-stack path, ("device", d) when the sharded backend
+    # runs the inner backend against one device's sub-group.  Delta
+    # classification keys its per-slot code signatures by this, so two
+    # devices' same-shaped sub-groups never diff against each other's
+    # staged codes.
+    stage_stream: "object" = "host"
 
     def blocks_for(self, batch: int, h: int, w: int) -> "BlockPlan":
         """Resolved Pallas block sizes for a ``(batch, h, w)`` stacked DFT
@@ -215,14 +223,20 @@ class BackendContext:
         the allocator after a temporary kernel dies, which would serve a
         stale cache entry.  Repeat hashing of a long-lived kernel is
         avoided by an id-keyed memo that HOLDS a reference to the array —
-        a live entry pins the object, so its id cannot be recycled while
-        the memo is valid."""
+        a live entry pins the object, so a *recycled* id cannot alias
+        while the memo is valid.  Pinning cannot protect against in-place
+        mutation though: a writeable numpy buffer reused across submits
+        is the same object with different bytes, so only immutable
+        operands (jax arrays, read-only ndarrays) are memoized — mutable
+        ones re-hash every time."""
         memo = self._digest_memo.get(id(kernel))
         if memo is not None and memo[0] is kernel:
             return memo[1]
         arr = np.asarray(kernel)
         key = (arr.shape, str(arr.dtype),
                hashlib.sha1(arr.tobytes()).hexdigest())
+        if isinstance(kernel, np.ndarray) and kernel.flags.writeable:
+            return key
         if len(self._digest_memo) >= 64:  # bounded: kernels are few
             self._digest_memo.clear()
         self._digest_memo[id(kernel)] = (kernel, key)
@@ -279,33 +293,39 @@ def _samples(x: jax.Array) -> int:
 
 
 def stage_group(category: str, xs: Sequence[jax.Array], ctx: BackendContext,
-                *, single_expand: bool = False) -> tuple[jax.Array, int]:
+                *, single_expand: bool = False,
+                ) -> tuple[jax.Array, int, tuple]:
     """Stack a same-shape group into the dispatch operand, serving the
     staged stack from the context's residency cache on a content hit.
 
-    Returns ``(stack, resident)`` where ``resident`` is how many of the
-    group's items were already staged (``len(xs)`` on a hit, 0 otherwise —
-    the stack is the staging unit, so residency is all-or-nothing here;
-    partial residency lives at the sharded backend's per-shard grain).
-    The analog backends thread ``resident`` into
-    ``batched_step_cost(resident_frames=...)`` so the modeled price
-    matches what dispatch just skipped.  With no cache attached this is
-    exactly the historical ``jnp.stack`` (or the host's single-item
-    expand), bit for bit.
+    Returns ``(stack, resident, delta_fractions)``: ``resident`` is how
+    many of the group's items were already staged (``len(xs)`` on a
+    group-grain hit), and ``delta_fractions`` the per-frame write scales
+    of the items that changed *little enough* to take the delta-encoded
+    partial write.  On a group miss each frame is classified against the
+    operand last staged into its dispatch slot (the context's
+    ``stage_stream`` + category + shape + position, via
+    ``ResidencyCache.classify_operand``): an unchanged frame counts
+    resident, a low-flip frame contributes its write scale, everything
+    else re-stages in full.  The analog backends thread both into
+    ``batched_step_cost(resident_frames=..., delta_fractions=...)`` so
+    the modeled price matches what dispatch just skipped.  With no cache
+    attached this is exactly the historical ``jnp.stack`` (or the host's
+    single-item expand), bit for bit.
 
     Rerunning the same jitted computation on the same cached stack yields
     bit-identical results, which is how the runtime-equivalence invariant
-    extends to cached == re-staged.
+    extends to cached == delta-staged == re-staged.
     """
     res = getattr(ctx, "residency", None)
     if res is None:
         if single_expand and len(xs) == 1:
-            return xs[0][None], 0
-        return jnp.stack(list(xs)), 0
+            return xs[0][None], 0, ()
+        return jnp.stack(list(xs)), 0, ()
     key = residency_key(ctx, xs, "frame")
     stack = res.lookup("host", key, category=category, ctx=ctx)
     if stack is not None:
-        return stack, len(xs)
+        return stack, len(xs), ()
     if single_expand and len(xs) == 1:
         stack = xs[0][None]
     else:
@@ -313,7 +333,25 @@ def stage_group(category: str, xs: Sequence[jax.Array], ctx: BackendContext,
     res.store("host", key, stack,
               int(getattr(stack, "nbytes", stack.size * 4)),
               category=category, kind="frame", ctx=ctx)
-    return stack, 0
+    classify = getattr(res, "classify_operand", None)
+    if classify is None:
+        return stack, 0, ()
+    # group-grain miss: classify each frame against its dispatch slot —
+    # unchanged frames are still resident per-frame, drifted ones delta
+    stream = getattr(ctx, "stage_stream", "host")
+    shape_sig = (tuple(xs[0].shape), str(xs[0].dtype))
+    op = key[1]
+    resident = 0
+    deltas: list[float] = []
+    for i, ck in enumerate(key[2]):
+        slot = (stream, category, "frame", op, shape_sig, i)
+        label, scale = classify(slot, ck, xs[i], ctx.spec,
+                                category=category, ctx=ctx)
+        if label == "hit":
+            resident += 1
+        elif label == "delta":
+            deltas.append(scale)
+    return stack, resident, tuple(deltas)
 
 
 def _operand_resident(category: str, arr: jax.Array, ctx: BackendContext,
@@ -359,7 +397,7 @@ class HostBackend(ExecutionBackend):
     name = "host"
 
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
-        stack, _ = stage_group(category, xs, ctx, single_expand=True)
+        stack, _, _ = stage_group(category, xs, ctx, single_expand=True)
         if category == "fft":
             out = _host_fft_intensity(stack)
         elif category == "conv":
@@ -459,7 +497,7 @@ class OpticalSimBackend(ExecutionBackend):
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
         batch = len(xs)
         n_in = _samples(xs[0])
-        stack, resident = stage_group(category, xs, ctx)
+        stack, resident, deltas = stage_group(category, xs, ctx)
         depth = ctx.pipeline_depth
         priced_residency = getattr(ctx, "residency", None) is not None
         if category == "fft":
@@ -467,7 +505,8 @@ class OpticalSimBackend(ExecutionBackend):
             cost = ctx.spec.batched_step_cost(n_in, _samples(out[0]),
                                               batch=batch,
                                               pipeline_depth=depth,
-                                              resident_frames=resident)
+                                              resident_frames=resident,
+                                              delta_fractions=deltas)
         elif category == "conv":
             mask = ctx.mask(kernel)
             # registered before the mask build so a repeat kernel prices as
@@ -481,7 +520,8 @@ class OpticalSimBackend(ExecutionBackend):
             cost = spec4.batched_step_cost(
                 n_in, _samples(out[0]), batch=batch, pipeline_depth=depth,
                 resident_frames=resident, weight_samples=k_n,
-                resident_weights=k_n if k_resident else 0)
+                resident_weights=k_n if k_resident else 0,
+                delta_fractions=deltas)
         elif category == "matmul":
             w_resident = _operand_resident(category, weights, ctx, "weights")
             out = _optical_matmul_batched(stack, weights,
@@ -500,6 +540,18 @@ class OpticalSimBackend(ExecutionBackend):
                 act_free = ctx.spec.dac.time_for(k * n, ctx.spec.dac_lanes) \
                     if w_write else 0.0
                 cost = dataclasses.replace(cost, dac_s=act_free)
+            elif deltas:
+                # delta-staged activations: resident frames free, delta
+                # frames at their write scale, the rest whole — same
+                # resident → delta → full accounting as _group_sides
+                written = batch - resident
+                ws = (math.fsum(deltas) + (written - len(deltas))) / written
+                col_tiles = math.ceil(n / ctx.spec.cols)
+                w_dac = ctx.spec.dac.time_for(k * n, ctx.spec.dac_lanes) \
+                    if w_write else 0.0
+                act_dac = ctx.spec.dac.time_for(
+                    written * m * k * col_tiles, ctx.spec.dac_lanes) * ws
+                cost = dataclasses.replace(cost, dac_s=w_dac + act_dac)
             cost = dataclasses.replace(
                 cost, interface_s=ctx.spec.interface_latency_s)
         else:

@@ -54,8 +54,11 @@ import collections
 import dataclasses
 from typing import Hashable, Iterable, Sequence
 
-__all__ = ["ResidencyCache", "ResidencyEntry", "operating_point",
-           "residency_key"]
+from repro.core.conversion import (code_signature, delta_write_scale,
+                                   expected_flip_fraction)
+
+__all__ = ["DELTA_THRESHOLD", "ResidencyCache", "ResidencyEntry",
+           "operating_point", "residency_key"]
 
 # Default capacity when no staging budget is supplied (the unlimited-budget
 # regime still wants bounded residency: the cache holds live array
@@ -67,6 +70,19 @@ DEFAULT_CAPACITY_BYTES = 64 * 1024 * 1024
 # would force tile_k to 1 and trade the batching win for the residency win
 # instead of keeping both.
 BUDGET_FRACTION = 0.5
+
+# Flip fractions at or below this classify a re-staged operand as a
+# *delta* write (partial price); above it the rewrite is effectively a new
+# operand and pays the full write.  Uncorrelated frames flip ~50% of their
+# LSBs, a drifting sensor frame far fewer — 0.35 splits those regimes with
+# margin on both sides.
+DELTA_THRESHOLD = 0.35
+
+# Per-operand slot signatures retained for delta classification.  The
+# ledger is keyed by dispatch slot, not content, so it grows with distinct
+# (stream, category, shape, index) shapes — past this it resets wholesale
+# (conservative: forgotten slots re-stage in full, never mis-price).
+SLOT_LEDGER_MAX = 4096
 
 
 def operating_point(spec) -> tuple:
@@ -111,10 +127,15 @@ class ResidencyCache:
         :data:`DEFAULT_CAPACITY_BYTES`.
       capacity_bytes: explicit capacity override (wins over ``budget``).
       fraction: the budget share when deriving capacity from ``budget``.
+      delta_threshold: flip fraction at or below which a changed operand
+        re-staged into a known dispatch slot takes the delta-encoded
+        partial write instead of a full re-stage
+        (:data:`DELTA_THRESHOLD`).
     """
 
     def __init__(self, budget=None, *, capacity_bytes: int | None = None,
-                 fraction: float = BUDGET_FRACTION) -> None:
+                 fraction: float = BUDGET_FRACTION,
+                 delta_threshold: float = DELTA_THRESHOLD) -> None:
         if capacity_bytes is not None:
             cap = int(capacity_bytes)
         elif budget is not None and not budget.is_unlimited:
@@ -132,6 +153,11 @@ class ResidencyCache:
             collections.defaultdict(collections.Counter)
         # submit(reuse=) tokens: token -> ((shape, dtype), content key)
         self._tokens: dict[str, tuple] = {}
+        # delta classification: dispatch slot -> (content key, signature)
+        # of the operand last staged into that slot — the "previously
+        # staged codes" a partial rewrite is diffed against
+        self.delta_threshold = float(delta_threshold)
+        self._slots: dict[tuple, tuple] = {}
 
     # -- events (cache-local counters + telemetry/tracer mirror) -------------
     def _emit(self, ctx, category: str, event: str, **attrs) -> None:
@@ -189,6 +215,62 @@ class ResidencyCache:
         self._bytes += nbytes
         return evicted
 
+    def classify_operand(self, slot_key: tuple, ck: tuple, x, spec, *,
+                         category: str, ctx=None) -> tuple[str, float]:
+        """Classify one operand re-staged into dispatch slot ``slot_key``
+        as ``("hit", 0.0)`` / ``("delta", write_scale)`` /
+        ``("full", 1.0)`` against the operand last staged there.
+
+        ``ck`` is the operand's content key (already computed by the
+        caller — the slot comparison is digest-equality, so an unchanged
+        operand never pays the signature).  A changed operand pays one
+        :func:`~repro.core.conversion.code_signature` at the DAC's
+        resolution; its flip fraction against the slot's previous
+        signature decides delta (≤ ``delta_threshold``, priced at
+        :func:`~repro.core.conversion.delta_write_scale`) versus full.
+        Every outcome updates the slot ledger; delta/full writes are
+        mirrored into ``RuntimeTelemetry.delta_stats`` when the context
+        carries telemetry.  Classification never touches the LRU — it is
+        the *write-side* price of an operand the group-grain lookup
+        already missed."""
+        prev = self._slots.get(slot_key)
+        if prev is not None and prev[0] == ck:
+            return "hit", 0.0
+        bits = spec.dac.bits
+        sig = code_signature(x, bits)
+        if slot_key not in self._slots and len(self._slots) >= SLOT_LEDGER_MAX:
+            self._slots.clear()
+        self._slots[slot_key] = (ck, sig)
+        tel = getattr(ctx, "telemetry", None) if ctx is not None else None
+        note = getattr(tel, "note_delta", None)
+        if prev is None:
+            if note is not None:
+                note(category)
+            return "full", 1.0
+        frac = expected_flip_fraction(prev[1], sig)
+        if frac > self.delta_threshold:
+            if note is not None:
+                note(category)
+            return "full", 1.0
+        self._emit(ctx, category, "delta", flip=frac)
+        if note is not None:
+            note(category, flip_fraction=frac)
+        return "delta", delta_write_scale(frac, bits)
+
+    def discard(self, device: Hashable, key: tuple, *, ctx=None,
+                reason: str = "donation") -> int:
+        """Drop one resident entry outright (buffer donation: a placed
+        frame about to be re-staged donates its stale device buffer so
+        the update never holds two copies against the staging budget).
+        Returns the bytes freed, 0 when the entry was not resident."""
+        entry = self._lru.pop((device, key), None)
+        if entry is None:
+            return 0
+        self._bytes -= entry.nbytes
+        self._emit(ctx, entry.category, reason, device=str(device),
+                   kind=entry.kind, nbytes=entry.nbytes)
+        return entry.nbytes
+
     def invalidate_device(self, device: Hashable, *, ctx=None) -> int:
         """Drop ``device``'s whole resident set (fault quarantine: the
         bytes on a device that just faulted are not trustworthy, and
@@ -202,6 +284,11 @@ class ResidencyCache:
             self._emit(ctx, entry.category, "invalidation",
                        device=str(device), kind=entry.kind,
                        nbytes=entry.nbytes)
+        # the device's slot signatures go too: delta-diffing against codes
+        # staged on a quarantined device would price a partial write the
+        # hardware cannot be trusted to hold
+        for sk in [s for s in self._slots if s and s[0] == device]:
+            del self._slots[sk]
         return dropped
 
     def clear(self) -> None:
@@ -209,6 +296,7 @@ class ResidencyCache:
         run's ledger, not the cache's contents)."""
         self._lru.clear()
         self._bytes = 0
+        self._slots.clear()
 
     # -- views -----------------------------------------------------------------
     def resident_bytes(self, device: Hashable | None = None) -> int:

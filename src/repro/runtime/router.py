@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.conversion import delta_write_scale
 from repro.core.planner import CategoryProfile, OffloadPlan, plan_offload
 from repro.runtime.backends import CATEGORIES, CONV_CAPTURES
 from repro.runtime.executor import OffloadExecutor, OffloadResult
@@ -174,6 +175,21 @@ class PlanRouter:
             # is absorbing most of the write traffic lets a deeper batch
             # fit the same deadline, so the halving loop prices it in
             hit_rate = telemetry.residency_hit_rate(cat) or 0.0
+            # ...and the observed delta rate projects how many of the
+            # remaining (written) frames take the delta-encoded partial
+            # write at the observed mean flip fraction rather than a full
+            # re-stage — the same write-side deadline relief, one notch
+            # weaker than a hit
+            d_rate = telemetry.delta_rate(cat) or 0.0
+            mean_flip = telemetry.mean_flip_fraction(cat)
+            dac_bits = getattr(getattr(spec, "dac", None), "bits", 1)
+
+            def delta_proj(depth: int, resident: int) -> tuple:
+                written = depth - resident
+                n_delta = min(written, int(round(d_rate * written)))
+                if n_delta <= 0:
+                    return ()
+                return (delta_write_scale(mean_flip, dac_bits),) * n_delta
 
             if (deadline_s is not None and n_in > 0
                     and hasattr(spec, "batched_step_cost")):
@@ -184,13 +200,17 @@ class PlanRouter:
                     # check must too or the chosen depth blows the bound
                     pricing_spec = dataclasses.replace(
                         spec, phase_shift_captures=CONV_CAPTURES)
-                while k > 1 and pricing_spec.batched_step_cost(
+                while k > 1:
+                    resident = min(k, int(round(hit_rate * k)))
+                    cost = pricing_spec.batched_step_cost(
                         n_in, n_out or None, batch=k,
                         pipeline_depth=ex.pipeline_depth,
                         n_devices=max(1, min(n_cap, k)),
                         tile_k=tile_for(k),
-                        resident_frames=int(round(hit_rate * k)),
-                        ).total_s > deadline_s:
+                        resident_frames=resident,
+                        delta_fractions=delta_proj(k, resident))
+                    if cost.total_s <= deadline_s:
+                        break
                     k //= 2
             k = max(k, 1)
             chosen[cat] = (k, max(1, min(n_cap, k)), tile_for(k))

@@ -69,7 +69,7 @@ from repro.runtime.backends import (
     ideal_step_cost,
     register_backend,
 )
-from repro.runtime.residency import residency_key
+from repro.runtime.residency import operating_point, residency_key
 
 __all__ = ["ShardedOpticalBackend", "shard_sizes", "kernel_halo"]
 
@@ -300,6 +300,17 @@ class ShardedOpticalBackend(ExecutionBackend):
         cur = self._placements.get(pkey)
         if cur is not None and cur.pool == pool and cur.assign == assign:
             return cur
+        if cur is not None:
+            # donate the stale device buffers of frames that changed since
+            # the last commit: their re-stage is about to device_put a
+            # fresh copy, and keeping the old one resident would hold two
+            # copies of the frame against the staging budget until LRU
+            # pressure happened to evict the dead one
+            op = operating_point(ctx.spec)
+            for ck, slot in cur.assign.items():
+                if ck not in assign and slot < len(cur.pool):
+                    res.discard(("device", cur.pool[slot]),
+                                ("frame-shard", op, (ck,)), ctx=ctx)
         pl = _Placement(pool=pool, devices=devices, assign=assign,
                         frames=len(xs))
         self._placements[pkey] = pl
@@ -346,6 +357,21 @@ class ShardedOpticalBackend(ExecutionBackend):
                            category=k[0], device=d)
                 tr.metrics.counter("placements", event="invalidate",
                                    category=k[0]).inc()
+
+    def _inner_run_on(self, category, shard, ctx, kernel, weights, device):
+        """Run the inner backend with the context's ``stage_stream`` pinned
+        to logical ``device`` for the duration of the call, so delta
+        classification's per-slot code signatures never alias across
+        devices — two devices' same-shaped sub-groups stage into different
+        physical write streams even under the sequential off-mesh
+        fallback."""
+        prev = getattr(ctx, "stage_stream", "host")
+        ctx.stage_stream = ("device", device)
+        try:
+            return self.inner.run(category, shard, ctx, kernel=kernel,
+                                  weights=weights)
+        finally:
+            ctx.stage_stream = prev
 
     # -- dispatch --------------------------------------------------------------
     def run(self, category, xs, ctx, *, kernel=None, weights=None):
@@ -470,8 +496,8 @@ class ShardedOpticalBackend(ExecutionBackend):
                 cached = res.lookup(("device", device), key,
                                     category=category, ctx=ctx)
                 if cached is not None:
-                    return self.inner.run(category, cached, ctx,
-                                          kernel=kernel, weights=weights)
+                    return self._inner_run_on(category, cached, ctx,
+                                              kernel, weights, device)
             # only the frames are committed per device: the kernel /
             # weights (and the masks derived from them) stay
             # uncommitted, so jit moves them to whichever device
@@ -485,8 +511,8 @@ class ShardedOpticalBackend(ExecutionBackend):
                                  for x in shard)
                     res.store(("device", device), key, list(shard), nbytes,
                               category=category, kind="shard", ctx=ctx)
-        return self.inner.run(category, shard, ctx, kernel=kernel,
-                              weights=weights)
+        return self._inner_run_on(category, shard, ctx, kernel, weights,
+                                  device)
 
     def _run_group_placed(self, category, xs, ctx, kernel, weights, pl):
         """Group sharding through a committed device placement.
@@ -572,8 +598,7 @@ class ShardedOpticalBackend(ExecutionBackend):
                           int(getattr(y, "nbytes", y.size * 4)),
                           category=category, kind="frame-shard", ctx=ctx)
                 served.append(y)
-        return self.inner.run(category, served, ctx, kernel=kernel,
-                              weights=weights)
+        return self._inner_run_on(category, served, ctx, kernel, weights, d)
 
     def _observe_shard(self, ctx, category, d, dt_s, cost):
         """Feed one healthy shard wall to the per-device straggler

@@ -33,7 +33,8 @@ from repro.core.accelerator import StepCost
 from repro.core.planner import CategoryProfile
 from repro.runtime.metrics import Histogram
 
-__all__ = ["BackendStats", "DeviceStats", "RuntimeTelemetry", "WindowStats"]
+__all__ = ["BackendStats", "DeltaStats", "DeviceStats", "RuntimeTelemetry",
+           "WindowStats"]
 
 # Backends whose measured wall time is honest *host* time for planning
 # (sharded-over-host still executes digitally, scattered or not).
@@ -79,6 +80,22 @@ class DeviceStats:
     invocations: int = 0      # sharded invocations this device took part in
     samples_in: int = 0       # scalars through THIS device's DAC
     samples_out: int = 0      # scalars back through THIS device's ADC
+
+
+@dataclasses.dataclass
+class DeltaStats:
+    """Delta-staging ledger for one category: how many written operands
+    took the partial (delta-encoded) write versus the full re-stage, and
+    the summed flip fraction of the delta writes — the mean flip fraction
+    is what the router feeds back into write-side deadline pricing."""
+
+    frames: int = 0           # operands staged as delta writes
+    full: int = 0             # written operands that re-staged in full
+    flip_sum: float = 0.0     # sum of delta writes' flip fractions
+
+    @property
+    def mean_flip_fraction(self) -> float:
+        return self.flip_sum / self.frames if self.frames else 0.0
 
 
 @dataclasses.dataclass
@@ -145,6 +162,11 @@ class RuntimeTelemetry:
         # hit rate is what the router weighs batch depth against
         self.residency_counts: dict[str, collections.Counter] = \
             collections.defaultdict(collections.Counter)
+        # category -> delta-staging ledger: delta-written vs fully
+        # re-staged operand counts and summed flip fractions — the
+        # write-side signal `replan` weighs alongside the hit rate
+        self.delta_stats: dict[str, DeltaStats] = \
+            collections.defaultdict(DeltaStats)
         # (category, backend) -> pipeline-window occupancy: the per-engine
         # in-flight depth each dispatch actually found — the measured
         # overlap the `engines=` composed price is judged against
@@ -270,6 +292,45 @@ class RuntimeTelemetry:
             misses += c.get("miss", 0)
         total = hits + misses
         return None if total == 0 else hits / total
+
+    def note_delta(self, category: str, *,
+                   flip_fraction: float | None = None) -> None:
+        """Count one *written* (non-hit) operand staging against
+        ``category``: with a ``flip_fraction`` it was a delta-encoded
+        partial write at that measured LSB flip fraction; with ``None``
+        it re-staged in full (first sighting, or a flip fraction past
+        the delta threshold)."""
+        st = self.delta_stats[category]
+        if flip_fraction is None:
+            st.full += 1
+        else:
+            st.frames += 1
+            st.flip_sum += max(0.0, min(1.0, float(flip_fraction)))
+
+    def delta_rate(self, category: str | None = None) -> float | None:
+        """delta writes / all writes for ``category`` (overall when None);
+        ``None`` before any write-side staging was classified — no traffic
+        is no claim, and the router treats it as rate 0."""
+        frames = full = 0
+        for cat, st in self.delta_stats.items():
+            if category is not None and cat != category:
+                continue
+            frames += st.frames
+            full += st.full
+        total = frames + full
+        return None if total == 0 else frames / total
+
+    def mean_flip_fraction(self, category: str | None = None) -> float:
+        """Mean LSB flip fraction across the observed delta writes for
+        ``category`` (overall when None); 0.0 when none occurred."""
+        frames = 0
+        flips = 0.0
+        for cat, st in self.delta_stats.items():
+            if category is not None and cat != category:
+                continue
+            frames += st.frames
+            flips += st.flip_sum
+        return flips / frames if frames else 0.0
 
     def faults_total(self, category: str | None = None) -> int:
         """Total fault events observed (for ``category``, or overall)."""
@@ -516,6 +577,11 @@ class RuntimeTelemetry:
                 self._recovery[cat] = h.copy()
         for cat, counts in other.residency_counts.items():
             self.residency_counts[cat].update(counts)
+        for cat, st in other.delta_stats.items():
+            mine_d = self.delta_stats[cat]
+            mine_d.frames += st.frames
+            mine_d.full += st.full
+            mine_d.flip_sum += st.flip_sum
         for key, st in other.engine_windows.items():
             mine_w = self.engine_windows[key]
             mine_w.dispatches += st.dispatches
@@ -533,6 +599,7 @@ class RuntimeTelemetry:
         self.fault_counts.clear()
         self._recovery.clear()
         self.residency_counts.clear()
+        self.delta_stats.clear()
         self.engine_windows.clear()
         self._t0 = None
         self._window_s = 0.0
@@ -584,6 +651,11 @@ class RuntimeTelemetry:
             if rate is not None:
                 row += f" | hit rate {rate:.0%}"
             rows.append(row)
+        for cat, st in sorted(self.delta_stats.items()):
+            if st.frames or st.full:
+                rows.append(
+                    f"  delta[{cat}]: delta x{st.frames} full x{st.full}"
+                    f" | mean flip {st.mean_flip_fraction:.1%}")
         if self._window_s:
             rows.append(f"  window={self._window_s:.4g}s "
                         f"recorded={self.recorded_s():.4g}s")

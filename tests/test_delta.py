@@ -1,0 +1,406 @@
+"""Delta-encoded DAC staging: pay only for the bits that flip.
+
+The lever this file locks down (PR 10): a changed operand re-staged into a
+known dispatch slot pays a *partial* write priced by its measured LSB-flip
+fraction — strictly between a residency hit (free write side) and a full
+re-stage — while retiring bit-equal to the re-staged path (classification
+never touches the staged bytes, only their price).  Covered here:
+
+  * the code-signature flip model (``repro.core.conversion``): exact XOR
+    popcount when full codes are retained, per-plane independence upper
+    bound otherwise, and the ``delta_write_scale`` floor of ``1/bits``
+    (a re-assert still strobes one ladder slot — only a hit is free);
+  * ``batched_step_cost(delta_fractions=...)`` on BOTH spec families:
+    defaults bit-equal, hit <= delta <= full guaranteed, invalid
+    fractions and overflowing frame accounting rejected;
+  * the content-key memo aliasing fix (mutable buffers re-hash);
+  * dispatch/model agreement: the delta-staged flush's cost IS
+    ``batched_step_cost(resident_frames=R, delta_fractions=...)``;
+  * placed re-stage donating the stale device buffer;
+  * the router weighing the observed delta rate into deadline pricing.
+
+Runs under hypothesis when installed (nightly CI uses the ``nightly``
+profile); the tier-1 anchor grid runs always.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.accelerator import ANDERSON_MVM, PROTOTYPE_4F
+from repro.core.conversion import (
+    ConverterSpec,
+    CodeSignature,
+    code_signature,
+    delta_write_scale,
+    expected_flip_fraction,
+    quantized_codes,
+)
+from repro.runtime import (
+    DELTA_THRESHOLD,
+    BackendContext,
+    OffloadExecutor,
+    PlanRouter,
+    ResidencyCache,
+    ShardedOpticalBackend,
+    operating_point,
+)
+
+LANED_4F = dataclasses.replace(
+    PROTOTYPE_4F, name="laned-4f", interface_latency_s=1.0e-3,
+    dac_lanes=48, adc_lanes=48,
+    slm_interface_hz=100e6, camera_interface_hz=100e6,
+    device_sync_s=1.0e-5)
+
+HI_FI_ADC = ConverterSpec(name="hifi-adc", kind="adc", bits=12,
+                          rate_hz=5.0e8, power_w=0.060, enob=10.5)
+
+SPEC = dataclasses.replace(LANED_4F, adc=HI_FI_ADC)
+
+BITS = SPEC.dac.bits
+
+
+def _imgs(n, shape=(32, 32), seed=0):
+    key = jax.random.PRNGKey(seed)
+    return [jax.random.uniform(jax.random.fold_in(key, i), shape)
+            for i in range(n)]
+
+
+def _drift(img, i, scale=0.01):
+    """A small correlated perturbation: the drifting-sensor regime whose
+    flip fraction sits well under ``DELTA_THRESHOLD`` at 6 DAC bits."""
+    key = jax.random.fold_in(jax.random.PRNGKey(1234), i)
+    return img + scale * jax.random.uniform(key, img.shape)
+
+
+def _flush(ex, category, imgs, **kw):
+    hs = [ex.submit(category, im, **kw) for im in imgs]
+    ex.flush()
+    return [np.asarray(h.value) for h in hs], [h.cost for h in hs]
+
+
+# --- the flip model ---------------------------------------------------------------
+
+def test_quantized_codes_affine_map():
+    codes = quantized_codes(np.linspace(0.0, 1.0, 64), 6)
+    assert codes.dtype == np.uint16
+    assert codes.min() == 0 and codes.max() == 63
+    # a constant operand spans zero range: every code collapses to 0
+    assert not quantized_codes(np.full(16, 3.7), 6).any()
+    with pytest.raises(ValueError):
+        quantized_codes(np.ones(4), 0)
+
+
+def test_code_signature_retains_codes_only_when_small():
+    a = np.linspace(0.0, 1.0, 32)
+    small = code_signature(a, BITS)
+    assert small.codes is not None and small.n == 32
+    assert len(small.plane_counts) == BITS
+    big = code_signature(a, BITS, full_code_max=16)
+    assert big.codes is None
+    assert big.plane_counts == small.plane_counts
+
+
+def test_expected_flip_fraction_exact_and_estimate():
+    rng = np.random.default_rng(0)
+    a, b = rng.random(1024), rng.random(1024)
+    sa, sb = code_signature(a, BITS), code_signature(b, BITS)
+    # identical codes flip nothing; a changed operand flips something
+    assert expected_flip_fraction(sa, sa) == 0.0
+    exact = expected_flip_fraction(sa, sb)
+    assert 0.0 < exact <= 1.0
+    # uncorrelated operands flip ~half their code bits
+    assert 0.35 < exact < 0.65
+    # the plane-count estimate (codes dropped) never undercharges
+    ea = CodeSignature(sa.bits, sa.n, sa.plane_counts)
+    eb = CodeSignature(sb.bits, sb.n, sb.plane_counts)
+    assert expected_flip_fraction(ea, eb) >= exact - 1e-12
+    # incomparable signatures are a full rewrite by definition
+    assert expected_flip_fraction(sa, code_signature(b, BITS + 1)) == 1.0
+    assert expected_flip_fraction(sa, code_signature(b[:512], BITS)) == 1.0
+
+
+def test_delta_write_scale_floor_and_cap():
+    assert delta_write_scale(0.0, BITS) == pytest.approx(1.0 / BITS)
+    assert delta_write_scale(1e-9, BITS) == pytest.approx(1.0 / BITS)
+    assert delta_write_scale(0.5, BITS) == 0.5
+    assert delta_write_scale(2.0, BITS) == 1.0
+    with pytest.raises(ValueError):
+        delta_write_scale(0.5, 0)
+
+
+# --- the cost model ---------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", [LANED_4F, ANDERSON_MVM],
+                         ids=["4f", "mvm"])
+def test_batched_step_cost_delta_defaults_and_ordering(spec):
+    """Defaults reproduce the historical prices bit for bit, and the
+    write-side price is ordered hit <= delta <= full — a delta write can
+    never beat a hit (the ladder still strobes) nor cost more than the
+    full rewrite it replaces."""
+    base = spec.batched_step_cost(4096, batch=8)
+    again = spec.batched_step_cost(4096, batch=8, delta_fractions=())
+    assert base == again
+    hit = spec.batched_step_cost(4096, batch=8, resident_frames=8)
+    delta = spec.batched_step_cost(4096, batch=8,
+                                   delta_fractions=(0.2,) * 8)
+    assert hit.dac_s < delta.dac_s < base.dac_s
+    assert hit.total_s < delta.total_s < base.total_s
+    # all-1.0 scales ARE the full write, bit for bit
+    unity = spec.batched_step_cost(4096, batch=8,
+                                   delta_fractions=(1.0,) * 8)
+    assert unity == base
+    # resident frames and delta frames compose: the remaining writes price
+    mixed = spec.batched_step_cost(4096, batch=8, resident_frames=4,
+                                   delta_fractions=(0.2,) * 4)
+    part = spec.batched_step_cost(4096, batch=8, resident_frames=4)
+    assert hit.total_s < mixed.total_s < part.total_s
+
+
+@pytest.mark.parametrize("spec", [LANED_4F, ANDERSON_MVM],
+                         ids=["4f", "mvm"])
+def test_batched_step_cost_delta_validation(spec):
+    with pytest.raises(ValueError):
+        spec.batched_step_cost(4096, batch=8, delta_fractions=(0.0,))
+    with pytest.raises(ValueError):
+        spec.batched_step_cost(4096, batch=8, delta_fractions=(1.5,))
+    with pytest.raises(ValueError):
+        spec.batched_step_cost(4096, batch=8, resident_frames=6,
+                               delta_fractions=(0.5,) * 3)
+
+
+def test_delta_price_monotone_grid():
+    """Tier-1 anchor grid (the hypothesis sweep below is nightly/slow):
+    the delta price is monotone in the write scale and pinned between the
+    hit and full prices at the extremes."""
+    for spec in (LANED_4F, ANDERSON_MVM):
+        hit = spec.batched_step_cost(4096, batch=8,
+                                     resident_frames=8).total_s
+        full = spec.batched_step_cost(4096, batch=8).total_s
+        prev = hit
+        for s in (0.05, 0.1, 0.25, 0.5, 0.75, 1.0):
+            c = spec.batched_step_cost(4096, batch=8,
+                                       delta_fractions=(s,) * 8).total_s
+            assert prev <= c
+            prev = c
+        assert prev == full
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.slow
+    @settings(deadline=None)
+    @given(scales=st.lists(st.floats(min_value=1e-6, max_value=1.0),
+                           min_size=1, max_size=8),
+           resident=st.integers(min_value=0, max_value=7))
+    def test_delta_price_between_hit_and_full_property(scales, resident):
+        batch = 8
+        resident = min(resident, batch - len(scales))
+        for spec in (LANED_4F, ANDERSON_MVM):
+            hit = spec.batched_step_cost(4096, batch=batch,
+                                         resident_frames=batch)
+            full = spec.batched_step_cost(4096, batch=batch)
+            same_res = spec.batched_step_cost(4096, batch=batch,
+                                              resident_frames=resident)
+            delta = spec.batched_step_cost(4096, batch=batch,
+                                           resident_frames=resident,
+                                           delta_fractions=tuple(scales))
+            assert hit.total_s <= delta.total_s <= same_res.total_s
+            assert delta.total_s <= full.total_s
+            assert hit.dac_s <= delta.dac_s <= same_res.dac_s
+
+
+# --- the memo aliasing fix --------------------------------------------------------
+
+def test_content_key_never_memoizes_writeable_buffers():
+    """Regression: an id-keyed digest memo served a stale key when a
+    writeable numpy buffer was mutated in place between submits — same
+    object, same id, different bytes.  Mutable operands now re-hash every
+    time; immutable ones (jax arrays, read-only ndarrays) still memoize."""
+    ctx = BackendContext(spec=SPEC)
+    buf = np.zeros((8, 8), dtype=np.float32)
+    k1 = ctx.content_key(buf)
+    assert id(buf) not in ctx._digest_memo
+    buf[0, 0] = 1.0
+    assert ctx.content_key(buf) != k1
+    ro = np.ones((4, 4))
+    ro.setflags(write=False)
+    kr = ctx.content_key(ro)
+    assert id(ro) in ctx._digest_memo
+    assert ctx.content_key(ro) == kr
+    arr = jnp.ones((4, 4))
+    ctx.content_key(arr)
+    assert id(arr) in ctx._digest_memo
+
+
+# --- slot classification ----------------------------------------------------------
+
+def test_classify_operand_hit_delta_full():
+    cache = ResidencyCache(capacity_bytes=1 << 20)
+    slot = ("host", "fft", "frame", operating_point(SPEC), ((32, 32),
+                                                           "float32"), 0)
+    img = _imgs(1)[0]
+    ck = ("k", 0)
+    # never seen: full write, ledger seeded
+    assert cache.classify_operand(slot, ck, img, SPEC,
+                                  category="fft") == ("full", 1.0)
+    # unchanged content key: hit, no signature recomputed
+    assert cache.classify_operand(slot, ck, img, SPEC,
+                                  category="fft") == ("hit", 0.0)
+    # small drift: delta at the measured flip fraction's write scale
+    label, scale = cache.classify_operand(slot, ("k", 1), _drift(img, 0),
+                                          SPEC, category="fft")
+    assert label == "delta"
+    assert 1.0 / BITS <= scale <= delta_write_scale(DELTA_THRESHOLD, BITS)
+    assert cache.counts["fft"]["delta"] == 1
+    # an unrelated frame flips ~half its bits: full re-stage
+    other = _imgs(1, seed=77)[0]
+    assert cache.classify_operand(slot, ("k", 2), other, SPEC,
+                                  category="fft") == ("full", 1.0)
+
+
+def test_invalidate_device_drops_slot_signatures():
+    cache = ResidencyCache(capacity_bytes=1 << 20)
+    img = _imgs(1)[0]
+    slot = (("device", 1), "fft", "frame", operating_point(SPEC),
+            ((32, 32), "float32"), 0)
+    cache.classify_operand(slot, ("k", 0), img, SPEC, category="fft")
+    cache.invalidate_device(("device", 1))
+    # the quarantined device's codes are gone: a drifted re-stage is a
+    # full write again, not a delta against untrustworthy bytes
+    assert cache.classify_operand(slot, ("k", 1), _drift(img, 0), SPEC,
+                                  category="fft") == ("full", 1.0)
+
+
+# --- dispatch/model agreement and equivalence -------------------------------------
+
+def test_delta_staged_flush_priced_by_measured_flip():
+    """The acceptance criterion on the cost model: a correlated-drift
+    flush prices write-side DAC strictly between a hit and a full
+    re-stage, and the dispatched cost IS
+    ``batched_step_cost(resident_frames=R, delta_fractions=...)`` at the
+    measured flip fractions."""
+    imgs = _imgs(6)
+    drift = list(imgs)
+    for i in (0, 3):
+        drift[i] = _drift(imgs[i], i)
+    fracs = [expected_flip_fraction(
+        code_signature(np.asarray(imgs[i]), BITS),
+        code_signature(np.asarray(drift[i]), BITS)) for i in (0, 3)]
+    assert all(0.0 < f <= DELTA_THRESHOLD for f in fracs)
+    scales = tuple(delta_write_scale(f, BITS) for f in fracs)
+
+    ex = OffloadExecutor(SPEC, max_batch=8, residency=True)
+    _flush(ex, "fft", imgs)                       # full stage, slots seeded
+    _, costs = _flush(ex, "fft", drift)           # 4 resident, 2 delta
+    n = imgs[0].size
+    want = ex.spec.batched_step_cost(n, n, batch=len(drift),
+                                     pipeline_depth=ex.pipeline_depth,
+                                     resident_frames=4,
+                                     delta_fractions=scales)
+    full = ex.spec.batched_step_cost(n, n, batch=len(drift),
+                                     pipeline_depth=ex.pipeline_depth)
+    got = costs[0]  # per-call share of the invocation's modeled cost
+    np.testing.assert_allclose(got.total_s, want.total_s / len(drift),
+                               rtol=1e-12)
+    np.testing.assert_allclose(got.dac_s * len(drift), want.dac_s,
+                               rtol=1e-9)
+    assert 0.0 < got.dac_s * len(drift) < full.dac_s
+    # the ledger saw 6 full writes then 2 deltas, at the measured flips
+    assert ex.residency.counts["fft"]["delta"] == 2
+    assert ex.telemetry.delta_rate("fft") == pytest.approx(2 / 8)
+    assert ex.telemetry.mean_flip_fraction("fft") == \
+        pytest.approx(sum(fracs) / 2)
+
+
+@pytest.mark.parametrize("backend", ["host", "optical-sim"])
+def test_delta_staged_equals_restaged(backend):
+    """The equivalence invariant, one more axis: delta-staged == re-staged
+    bit-equal (classification prices the write, it never alters the
+    staged bytes)."""
+    imgs = _imgs(6)
+    drift = [_drift(im, i) if i % 3 == 0 else im
+             for i, im in enumerate(imgs)]
+    plain = OffloadExecutor(SPEC, max_batch=8, default_backend=backend)
+    restaged, _ = _flush(plain, "fft", drift)
+    ex = OffloadExecutor(SPEC, max_batch=8, default_backend=backend,
+                         residency=True)
+    _flush(ex, "fft", imgs)
+    delta_staged, _ = _flush(ex, "fft", drift)
+    for d, r in zip(delta_staged, restaged):
+        np.testing.assert_array_equal(d, r)
+    # a repeat of the drifted group is a group-grain hit: write side free
+    _, costs = _flush(ex, "fft", drift)
+    if backend == "optical-sim":
+        assert costs[0].dac_s == 0.0
+
+
+# --- placed re-stage donates the stale buffer -------------------------------------
+
+def test_commit_placement_donates_changed_frames(monkeypatch):
+    import repro.runtime.sharded as sh
+    dev = jax.devices()[0]
+    monkeypatch.setattr(sh, "shard_devices", lambda n: [dev] * n)
+    be = ShardedOpticalBackend(inner="host")
+    ctx = BackendContext(spec=SPEC, n_devices=2)
+    ctx.residency = ResidencyCache(capacity_bytes=1 << 22)
+    imgs = _imgs(4)
+    assert be.commit_placement("fft", imgs, ctx) is not None
+    be.run("fft", imgs, ctx)
+    op = operating_point(SPEC)
+    dead_key = ("frame-shard", op, (ctx.content_key(imgs[0]),))
+    assert dead_key in ctx.residency.resident_keys()
+
+    drift = [_drift(imgs[0], 0)] + imgs[1:]
+    be.commit_placement("fft", drift, ctx)
+    # the stale device buffer was donated at commit, before the re-stage
+    assert ctx.residency.counts["fft"]["donation"] == 1
+    assert dead_key not in ctx.residency.resident_keys()
+    be.run("fft", drift, ctx)
+    # never two copies of a frame against the budget: 4 frames, 4 shards
+    frame_shards = [k for k in ctx.residency.resident_keys()
+                    if k[0] == "frame-shard"]
+    assert len(frame_shards) == 4
+    # unchanged frames kept their resident entries (only frame 0 re-shipped)
+    for im in imgs[1:]:
+        assert ("frame-shard", op,
+                (ctx.content_key(im),)) in frame_shards
+
+
+# --- the router weighs the delta rate ---------------------------------------------
+
+def test_router_replan_weighs_delta_rate():
+    """The deadline-halving loop prices the observed delta rate in: the
+    same traffic sustains a deeper batch when most writes are partial."""
+    def _router(flip):
+        ex = OffloadExecutor(SPEC, max_batch=16)
+        ex.telemetry.record("fft", "optical-sim", calls=16,
+                            samples_in=16 * 4096, samples_out=16 * 4096,
+                            wall_s=0.01)
+        for _ in range(8):
+            ex.telemetry.note_delta("fft", flip_fraction=flip)
+        return PlanRouter(ex)
+
+    scale = delta_write_scale(0.05, BITS)
+    priced = SPEC.batched_step_cost(4096, 4096, batch=16, pipeline_depth=2,
+                                    n_devices=1, tile_k=16,
+                                    delta_fractions=(scale,) * 16)
+    full = SPEC.batched_step_cost(4096, 4096, batch=16, pipeline_depth=2,
+                                  n_devices=1, tile_k=16)
+    # a deadline only the delta-priced write side meets at full depth
+    deadline = (priced.total_s + full.total_s) / 2
+    hot = _router(flip=0.05)    # delta rate 1.0, mean flip 0.05
+    cold = _router(flip=None)   # every write full: delta rate 0
+    k_hot = hot.choose_sharding(deadline)["fft"][0]
+    k_cold = cold.choose_sharding(deadline)["fft"][0]
+    assert k_hot == 16
+    assert k_cold < 16

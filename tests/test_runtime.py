@@ -873,8 +873,8 @@ def test_telemetry_merge_reset_cover_every_field():
 
     expected = sorted([
         "stats", "device_stats", "_submits", "_latency", "fault_counts",
-        "_recovery", "residency_counts", "engine_windows", "_t0",
-        "_window_s", "_in_window_s",
+        "_recovery", "residency_counts", "delta_stats", "engine_windows",
+        "_t0", "_window_s", "_in_window_s",
     ])
     tel = RuntimeTelemetry()
     assert sorted(vars(tel)) == expected, (
@@ -898,6 +898,9 @@ def test_telemetry_merge_reset_cover_every_field():
     tel.note_residency("fft", "hit")
     tel.note_residency("fft", "miss")
     tel.note_residency("conv", "eviction")
+    tel.note_delta("fft", flip_fraction=0.125)
+    tel.note_delta("fft")
+    tel.note_delta("conv", flip_fraction=0.25)
     tel.note_window("fft", "optical-sim", in_flight=2, depth=2)
     tel.note_window("conv", "host", in_flight=1, depth=3)
     tel.stop()
@@ -926,6 +929,9 @@ def test_telemetry_merge_reset_cover_every_field():
     assert merged.stats[("fft", "optical-sim")].calls == 4
     assert merged.fault_counts["fft"]["error"] == 2
     assert merged.residency_counts["fft"]["hit"] == 2
+    assert merged.delta_stats["fft"].frames == 2
+    assert merged.delta_stats["fft"].full == 2
+    assert merged.delta_stats["fft"].flip_sum == pytest.approx(0.25)
 
     tel.reset()
     assert snapshot(tel) == snapshot(RuntimeTelemetry())
